@@ -1,0 +1,68 @@
+"""§Roofline table generator from dry-run artifacts.
+
+Reads results/dryrun/*.json (written by `python -m repro.launch.dryrun`)
+and emits the per-(arch x shape x mesh) three-term table, dominant
+bottleneck, useful-FLOPs ratio and the MFU bound, as markdown + CSV.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Tuple
+
+HEADER = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+          "dominant | useful_flops | MFU_bound |")
+SEP = "|" + "---|" * 9
+
+
+def load_rows(path: str = "results/dryrun") -> List[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        r = json.load(open(f))
+        t = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "mesh": "2x16x16" if r.get("multi_pod") else "16x16",
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"], "dominant": t["dominant"],
+            "useful_flops": r["useful_flops_ratio"],
+            "mfu_bound": r["model_flops_utilization_bound"],
+            "file": os.path.basename(f),
+        })
+    return rows
+
+
+def markdown(rows: List[dict]) -> str:
+    out = [HEADER, SEP]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compute_s']:.4f} | {r['memory_s']:.4f} | "
+            f"{r['collective_s']:.4f} | {r['dominant']} | "
+            f"{r['useful_flops']:.2f} | {r['mfu_bound']:.3f} |")
+    return "\n".join(out)
+
+
+def roofline_summary() -> Tuple[List[dict], str]:
+    rows = load_rows()
+    if not rows:
+        return ([{"name": "roofline_table", "us_per_call": 0,
+                  "derived": "no dry-run artifacts"}],
+                "run `python -m repro.launch.dryrun --all` first")
+    bench_rows = [{
+        "name": f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+        "us_per_call": r["compute_s"] * 1e6,  # compute-term in us
+        "derived": (f"dom={r['dominant']};mem_s={r['memory_s']:.4f};"
+                    f"coll_s={r['collective_s']:.4f};"
+                    f"mfu_bound={r['mfu_bound']:.3f}")
+    } for r in rows]
+    n_dom = {}
+    for r in rows:
+        n_dom[r["dominant"]] = n_dom.get(r["dominant"], 0) + 1
+    return bench_rows, f"{len(rows)} cells; dominance: {n_dom}"
+
+
+if __name__ == "__main__":
+    print(markdown(load_rows()))

@@ -1,0 +1,56 @@
+"""Benchmark harness: one entry per paper table/figure + roofline.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
+Prints `name,us_per_call,derived` CSV plus per-figure headlines.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from . import kernel_bench, paper_figures
+    from .roofline_table import roofline_summary
+
+    benches = [
+        ("fig1", paper_figures.fig1_memory_pattern),
+        ("fig2", paper_figures.fig2_pressure_curve),
+        ("fig5", paper_figures.fig5_applications),
+        ("fig6", paper_figures.fig6_problem_sizes),
+        ("fig7", paper_figures.fig7_stability),
+        ("fig8", paper_figures.fig8_iterations),
+        ("lambda", paper_figures.lambda_sweep),
+        ("latency", paper_figures.controller_latency),
+        ("fleet", paper_figures.fleet_scale),
+        ("kern_flash", kernel_bench.flash_bench),
+        ("kern_decode", kernel_bench.decode_bench),
+        ("kern_ssm", kernel_bench.ssm_bench),
+        ("roofline", roofline_summary),
+    ]
+    print("name,us_per_call,derived")
+    headlines = []
+    for key, fn in benches:
+        if args.only and args.only not in key:
+            continue
+        try:
+            rows, headline = fn()
+        except Exception as e:      # a bench failure must not hide others
+            print(f"{key},0,ERROR:{e!r}")
+            headlines.append((key, f"ERROR {e!r}"))
+            continue
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+        headlines.append((key, headline))
+    print()
+    for k, h in headlines:
+        print(f"# {k}: {h}")
+
+
+if __name__ == "__main__":
+    main()

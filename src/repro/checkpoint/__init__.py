@@ -1,0 +1,7 @@
+"""Checkpoint substrate: sharded, atomic, manifest-driven."""
+
+from .checkpoint import (CheckpointManager, latest_step, restore_pytree,
+                         save_pytree)
+
+__all__ = ["CheckpointManager", "latest_step", "restore_pytree",
+           "save_pytree"]

@@ -1,0 +1,61 @@
+"""Config registry: ``--arch <id>`` resolution for all assigned archs."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from .base import (ArchConfig, InputShape, SHAPES, TRAIN_4K, PREFILL_32K,
+                   DECODE_32K, LONG_500K)
+
+_MODULES = {
+    "dbrx-132b": "dbrx_132b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a27b",
+    "whisper-large-v3": "whisper_large_v3",
+    "qwen2-1.5b": "qwen2_15b",
+    "gemma3-1b": "gemma3_1b",
+    "mistral-large-123b": "mistral_large_123b",
+    "llama3.2-1b": "llama32_1b",
+    "xlstm-125m": "xlstm_125m",
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+    "hymba-1.5b": "hymba_15b",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    smoke = name.endswith("-smoke")
+    base = name[: -len("-smoke")] if smoke else name
+    if base not in _MODULES:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {ARCH_IDS}")
+    mod = importlib.import_module(f".{_MODULES[base]}", __package__)
+    cfg: ArchConfig = mod.ARCH
+    return cfg.reduced() if smoke else cfg
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def get_shape(name: str) -> InputShape:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; available: {list(SHAPES)}")
+    return SHAPES[name]
+
+
+def cells(include_skips: bool = False):
+    """All (arch, shape) benchmark cells; skips filtered per DESIGN §5."""
+    out = []
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            if include_skips or cfg.supports_shape(s):
+                out.append((a, s.name))
+    return out
+
+
+__all__ = ["ARCH_IDS", "ArchConfig", "InputShape", "SHAPES", "TRAIN_4K",
+           "PREFILL_32K", "DECODE_32K", "LONG_500K", "all_configs",
+           "cells", "get_config", "get_shape"]

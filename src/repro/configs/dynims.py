@@ -1,0 +1,40 @@
+"""DynIMS controller parameters (paper Table I) + framework tier defaults.
+
+Table I: M=125 GB, r0=0.95, lambda=0.5, U_min=0, U_max=60 GB, T=100 ms.
+
+The framework reuses the same law for its own memory tiers; defaults for
+those tiers live here so every trainer/server instantiates identically.
+"""
+
+from __future__ import annotations
+
+from ..core.control import ControllerParams, GiB
+
+# The paper's exact Table I configuration.
+PAPER_TABLE_I = ControllerParams(
+    total_memory=125.0 * GiB,
+    r0=0.95,
+    lam=0.5,
+    u_min=0.0,
+    u_max=60.0 * GiB,
+    interval_s=0.1,
+)
+
+
+def host_cache_params(total_host_ram: float, *, u_max_frac: float = 0.5,
+                      **overrides) -> ControllerParams:
+    """Dataset shard cache on a TPU worker host (paper roles preserved)."""
+    kw = dict(total_memory=total_host_ram, r0=0.95, lam=0.5, u_min=0.0,
+              u_max=u_max_frac * total_host_ram, interval_s=0.1)
+    kw.update(overrides)
+    return ControllerParams(**kw)
+
+
+def hbm_pool_params(hbm_bytes: float = 16 * GiB, *,
+                    u_max_frac: float = 0.85, **overrides) -> ControllerParams:
+    """Serving KV-block pool in HBM: tighter r0 (OOM is fatal on device),
+    faster reclaim than grant (beyond-paper asymmetric gains)."""
+    kw = dict(total_memory=hbm_bytes, r0=0.92, lam=0.8, lam_grant=0.3,
+              u_min=0.0, u_max=u_max_frac * hbm_bytes, interval_s=0.05)
+    kw.update(overrides)
+    return ControllerParams(**kw)

@@ -1,0 +1,45 @@
+"""DynIMS core: the paper's contribution as a composable library.
+
+Layout mirrors the paper's four building blocks (Fig. 3) plus the
+storage actuation they drive and the simulator that reproduces the
+evaluation:
+
+* :mod:`.monitor`    -- monitoring agents (collectd analogue)
+* :mod:`.bus`        -- messaging bus (Kafka analogue)
+* :mod:`.stream`     -- stream aggregation (Flink analogue)
+* :mod:`.control`    -- the Eq. 1 feedback law + stability analysis
+* :mod:`.controller` -- the memory controller service (Vert.x analogue)
+* :mod:`.eviction`   -- LFU/LRU/FIFO/adaptive eviction policies
+* :mod:`.store`      -- managed stores: ShardCache, KVBlockPool
+* :mod:`.traces`     -- HPCC/HPL workload models (paper Figs 1-2)
+* :mod:`.cluster_sim`-- discrete-event reproduction of Sec. IV
+"""
+
+from .bus import MessageBus
+from .control import (ControllerParams, closed_loop_eigenvalue, control_step,
+                      fixed_point_capacity, is_stable, settling_time,
+                      simulate_saturated_loop, vectorized_step)
+from .controller import (CONTROL_TOPIC, ControlAction, ControlPlane,
+                         DynIMSController)
+from .eviction import (AdaptivePolicy, FIFOPolicy, LFUPolicy, LRUPolicy,
+                       make_policy)
+from .monitor import (DeviceMemoryMonitor, HostMemoryMonitor, MemorySample,
+                      SimulatedMonitor)
+from .store import (EvictionReport, KVBlockPool, ManagedStore, ShardCache,
+                    StoreRegistry, StoreStats)
+from .stream import AGG_TOPIC, RAW_TOPIC, AggregatedMetrics, MetricAggregator
+from .traces import (GiB, IterativeAppSpec, Phase, TierSpec, hpcc_trace,
+                     hpl_slowdown)
+
+__all__ = [
+    "AGG_TOPIC", "AdaptivePolicy", "AggregatedMetrics", "CONTROL_TOPIC",
+    "ControlAction", "ControlPlane", "ControllerParams",
+    "DeviceMemoryMonitor", "DynIMSController", "EvictionReport",
+    "FIFOPolicy", "GiB", "HostMemoryMonitor", "IterativeAppSpec",
+    "KVBlockPool", "LFUPolicy", "LRUPolicy", "ManagedStore", "MemorySample",
+    "MessageBus", "MetricAggregator", "Phase", "RAW_TOPIC", "ShardCache",
+    "SimulatedMonitor", "StoreRegistry", "StoreStats", "TierSpec",
+    "closed_loop_eigenvalue", "control_step", "fixed_point_capacity",
+    "hpcc_trace", "hpl_slowdown", "is_stable", "make_policy",
+    "settling_time", "simulate_saturated_loop", "vectorized_step",
+]

@@ -1,0 +1,217 @@
+"""The DynIMS feedback control law (paper Eq. 1) and its analysis tools.
+
+The controller arbitrates a single contended memory resource of size ``M``
+between a priority tenant (compute) and an opportunistic tenant (in-memory
+storage of capacity ``u``).  Each control interval it observes total system
+usage ``v`` and utilization ratio ``r = v / M`` and updates the storage
+capacity:
+
+    u_{i+1} = clamp(u_i - lam * v_i * (r_i - r0) / r0,  u_min, u_max)
+
+Paper parameters (Table I): M = 125 GB, r0 = 0.95, lam = 0.5, u_min = 0,
+u_max = 60 GB, T = 100 ms.
+
+Stability (derived here, consistent with the paper's empirical 0 < lam <= 2
+sweep): with a saturated store (occupancy == capacity) and constant compute
+demand ``d``, the closed loop is u' = f(u) with fixed point
+u* = r0*M - d and f'(u*) = 1 - lam, hence
+
+    asymptotically stable    iff 0 < lam < 2
+    monotone (no overshoot)  iff 0 < lam <= 1   (linearized; the true
+    loop's step grows with distance from u*, so monotone convergence
+    from far away empirically needs lam <~ 0.85)
+
+``control_step`` is the scalar, paper-faithful law.  ``vectorized_step`` is
+the jit/vmap-friendly JAX form used to run thousands of node controllers in
+one fused update (the form a 1000+-node deployment's central controller, or
+the cluster simulator, uses).
+
+Beyond-paper extensions (all default to the paper-faithful behaviour):
+
+* asymmetric gains -- reclaim (pressure) faster than grant (slack),
+* hysteresis deadband around ``r0`` to suppress jitter from metric noise,
+* slope feedforward -- act on a one-interval-ahead usage forecast, buying
+  back the monitoring delay the paper calls out as critical (Sec. II.B).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+GiB = float(2**30)
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerParams:
+    """Parameters of the DynIMS control law (paper Table I).
+
+    All capacities are in bytes.
+    """
+
+    total_memory: float                 # M
+    r0: float = 0.95                    # utilization threshold
+    lam: float = 0.5                    # aggressiveness
+    u_min: float = 0.0
+    u_max: float = 60.0 * GiB
+    interval_s: float = 0.1             # T
+
+    # --- beyond-paper knobs (paper-faithful defaults) -------------------
+    lam_grant: Optional[float] = None   # gain when r < r0 (None -> lam)
+    deadband: float = 0.0               # |r - r0| <= deadband -> hold
+    feedforward: float = 0.0            # 0 = off; else weight on dv/dt * T
+
+    def __post_init__(self) -> None:
+        if self.total_memory <= 0:
+            raise ValueError("total_memory must be positive")
+        if not (0.0 < self.r0 <= 1.0):
+            raise ValueError("r0 must be in (0, 1]")
+        if self.u_min < 0 or self.u_max < self.u_min:
+            raise ValueError("need 0 <= u_min <= u_max")
+        if self.interval_s <= 0:
+            raise ValueError("interval_s must be positive")
+
+    @property
+    def is_paper_faithful(self) -> bool:
+        return (
+            self.lam_grant is None
+            and self.deadband == 0.0
+            and self.feedforward == 0.0
+        )
+
+    def replace(self, **kw) -> "ControllerParams":
+        return dataclasses.replace(self, **kw)
+
+
+def control_step(
+    u: float,
+    v: float,
+    params: ControllerParams,
+    *,
+    v_prev: Optional[float] = None,
+) -> float:
+    """One scalar update of the paper's Eq. 1 with clamping.
+
+    Args:
+      u: current in-memory-storage capacity (bytes).
+      v: observed total system memory usage this interval (bytes).
+      params: control-law parameters.
+      v_prev: previous interval's usage; only used when
+        ``params.feedforward > 0`` (slope feedforward extension).
+
+    Returns:
+      The capacity for the next interval, clamped to [u_min, u_max].
+    """
+    m = params.total_memory
+    v_eff = v
+    if params.feedforward > 0.0 and v_prev is not None:
+        v_eff = v + params.feedforward * (v - v_prev)
+    r = v_eff / m
+    err = r - params.r0
+    if abs(err) <= params.deadband:
+        return float(np.clip(u, params.u_min, params.u_max))
+    lam = params.lam
+    if err < 0 and params.lam_grant is not None:
+        lam = params.lam_grant
+    u_next = u - lam * v_eff * err / params.r0
+    return float(np.clip(u_next, params.u_min, params.u_max))
+
+
+def vectorized_step(
+    u: jax.Array,
+    v: jax.Array,
+    *,
+    total_memory: jax.Array | float,
+    r0: float = 0.95,
+    lam: float = 0.5,
+    u_min: jax.Array | float = 0.0,
+    u_max: jax.Array | float = 60.0 * GiB,
+    lam_grant: Optional[float] = None,
+    deadband: float = 0.0,
+    v_prev: Optional[jax.Array] = None,
+    feedforward: float = 0.0,
+) -> jax.Array:
+    """Eq. 1 applied to ``N`` node controllers at once (jit/vmap friendly).
+
+    Shapes: ``u``, ``v`` (and optional ``v_prev``) are ``(N,)``;
+    ``total_memory`` / ``u_min`` / ``u_max`` broadcast against them.
+    """
+    u = jnp.asarray(u, jnp.float32)
+    v = jnp.asarray(v, jnp.float32)
+    v_eff = v
+    if feedforward > 0.0 and v_prev is not None:
+        v_eff = v + feedforward * (v - jnp.asarray(v_prev, jnp.float32))
+    r = v_eff / total_memory
+    err = r - r0
+    lam_eff = jnp.where(
+        (err < 0) & (lam_grant is not None),
+        lam_grant if lam_grant is not None else lam,
+        lam,
+    )
+    delta = lam_eff * v_eff * err / r0
+    u_next = jnp.where(jnp.abs(err) <= deadband, u, u - delta)
+    return jnp.clip(u_next, u_min, u_max)
+
+
+# ----------------------------------------------------------------------
+# Analysis helpers (used by tests and the lambda-sweep benchmark)
+# ----------------------------------------------------------------------
+
+def fixed_point_capacity(params: ControllerParams, compute_demand: float) -> float:
+    """Equilibrium storage capacity under constant compute demand.
+
+    With a saturated store, v = d + u, so r = r0  <=>  u* = r0*M - d,
+    clamped to the admissible range.
+    """
+    u_star = params.r0 * params.total_memory - compute_demand
+    return float(np.clip(u_star, params.u_min, params.u_max))
+
+
+def closed_loop_eigenvalue(params: ControllerParams) -> float:
+    """f'(u*) of the saturated-store closed loop: 1 - lam."""
+    return 1.0 - params.lam
+
+
+def is_stable(params: ControllerParams) -> bool:
+    """Asymptotic stability of the saturated-store closed loop."""
+    return abs(closed_loop_eigenvalue(params)) < 1.0
+
+
+def simulate_saturated_loop(
+    params: ControllerParams,
+    compute_demand: np.ndarray,
+    u0: float,
+    occupancy: float = 1.0,
+) -> np.ndarray:
+    """Roll the scalar loop forward against a compute-demand trace.
+
+    The store is modelled as ``occupancy``-full (paper's experiments run
+    with a hot cache, occupancy == 1).  Returns the capacity trace
+    ``u[t]`` with ``u[0] == u0``, one entry per demand sample.
+    """
+    demand = np.asarray(compute_demand, dtype=np.float64)
+    out = np.empty(demand.shape[0], dtype=np.float64)
+    u = float(u0)
+    v_prev: Optional[float] = None
+    for i, d in enumerate(demand):
+        out[i] = u
+        v = d + occupancy * u
+        u = control_step(u, v, params, v_prev=v_prev)
+        v_prev = v
+    return out
+
+
+def settling_time(
+    trace: np.ndarray, target: float, tol_frac: float = 0.02
+) -> Optional[int]:
+    """First index after which the trace stays within tol_frac of target."""
+    tol = max(abs(target) * tol_frac, 1e-9)
+    ok = np.abs(np.asarray(trace) - target) <= tol
+    for i in range(len(ok)):
+        if ok[i:].all():
+            return i
+    return None

@@ -1,0 +1,173 @@
+"""The DynIMS controller (the paper's Vert.x component).
+
+Event-driven: subscribes to aggregated metrics on the bus, runs the
+control law per node, and actuates the node's registered stores through
+a :class:`~repro.core.store.StoreRegistry`.  Also usable synchronously
+(``step``) by the trainer/serving loop and the cluster simulator.
+
+The paper's controller is a separate service receiving Kafka messages;
+ours runs in-process per host (sub-ms actuation) but keeps the same
+observe -> aggregate -> decide -> actuate pipeline and message schema, so
+a multi-host deployment only swaps the bus transport.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from .bus import MessageBus
+from .control import ControllerParams, control_step
+from .monitor import MemoryMonitor, MemorySample
+from .store import EvictionReport, StoreRegistry
+from .stream import AGG_TOPIC, RAW_TOPIC, AggregatedMetrics, MetricAggregator
+
+CONTROL_TOPIC = "control.actions"
+
+
+@dataclass
+class ControlAction:
+    """One capacity decision, published to the bus for observability."""
+
+    node: str
+    timestamp: float
+    u_prev: float
+    u_next: float
+    utilization: float
+    reports: List[EvictionReport] = field(default_factory=list)
+
+    @property
+    def delta(self) -> float:
+        return self.u_next - self.u_prev
+
+
+@dataclass
+class _NodeState:
+    registry: StoreRegistry
+    u: float
+    v_prev: Optional[float] = None
+
+
+class DynIMSController:
+    """Per-node feedback control of registered in-memory stores."""
+
+    def __init__(
+        self,
+        params: ControllerParams,
+        bus: Optional[MessageBus] = None,
+        signal: str = "latest",          # latest|ewma|max -- which aggregate drives Eq.1
+    ) -> None:
+        if signal not in ("latest", "ewma", "max"):
+            raise ValueError("signal must be latest|ewma|max")
+        self.params = params
+        self.signal = signal
+        self._nodes: Dict[str, _NodeState] = {}
+        self._bus = bus
+        self._lock = threading.RLock()
+        self.actions: List[ControlAction] = []
+        if bus is not None:
+            bus.subscribe(AGG_TOPIC, self._on_agg)
+
+    # -- wiring -------------------------------------------------------------
+    def attach_node(self, node: str, registry: StoreRegistry,
+                    u0: Optional[float] = None) -> None:
+        with self._lock:
+            u = registry.total_capacity() if u0 is None else float(u0)
+            self._nodes[node] = _NodeState(registry=registry, u=u)
+
+    def node_capacity(self, node: str) -> float:
+        with self._lock:
+            return self._nodes[node].u
+
+    # -- control ------------------------------------------------------------
+    def _on_agg(self, agg: AggregatedMetrics) -> None:
+        self.step(agg)
+
+    def step(self, agg: AggregatedMetrics) -> Optional[ControlAction]:
+        """Run Eq. 1 for one node from one aggregated observation."""
+        with self._lock:
+            state = self._nodes.get(agg.node)
+            if state is None:
+                return None
+            v = {
+                "latest": agg.used_latest,
+                "ewma": agg.used_ewma,
+                "max": agg.used_max,
+            }[self.signal]
+            params = self.params
+            if params.total_memory != agg.total and agg.total > 0:
+                params = params.replace(total_memory=agg.total)
+            u_next = control_step(state.u, v, params, v_prev=state.v_prev)
+            reports = state.registry.apply_capacity(u_next)
+            action = ControlAction(
+                node=agg.node, timestamp=agg.timestamp, u_prev=state.u,
+                u_next=u_next, utilization=v / agg.total if agg.total else 0.0,
+                reports=reports)
+            state.u = u_next
+            state.v_prev = v
+            self.actions.append(action)
+        if self._bus is not None:
+            self._bus.publish(CONTROL_TOPIC, action)
+        return action
+
+
+class ControlPlane:
+    """Full monitoring/control pipeline for a set of local nodes.
+
+    Wires monitor -> bus(RAW) -> aggregator -> bus(AGG) -> controller for
+    every attached node and drives them from one ``tick`` (the control
+    interval T).  ``run`` ticks in real time; ``tick`` is used by tests,
+    the simulator, and the trainer (which ticks from its step loop).
+    """
+
+    def __init__(
+        self,
+        params: ControllerParams,
+        window: int = 8,
+        ewma_alpha: float = 0.5,
+        signal: str = "latest",
+    ) -> None:
+        self.bus = MessageBus()
+        self.aggregator = MetricAggregator(window=window,
+                                           ewma_alpha=ewma_alpha, bus=self.bus)
+        self.controller = DynIMSController(params, bus=self.bus, signal=signal)
+        self._monitors: Dict[str, MemoryMonitor] = {}
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def attach(self, node: str, monitor: MemoryMonitor,
+               registry: StoreRegistry, u0: Optional[float] = None) -> None:
+        self._monitors[node] = monitor
+        self.controller.attach_node(node, registry, u0=u0)
+
+    def tick(self) -> List[ControlAction]:
+        """One control interval: sample every node, let control fire."""
+        n_before = len(self.controller.actions)
+        for monitor in self._monitors.values():
+            self.bus.publish(RAW_TOPIC, monitor.sample())
+        return self.controller.actions[n_before:]
+
+    # -- real-time loop -------------------------------------------------------
+    def run(self, duration_s: Optional[float] = None) -> None:
+        deadline = None if duration_s is None else time.time() + duration_s
+        while not self._stop.is_set():
+            t0 = time.time()
+            self.tick()
+            if deadline is not None and time.time() >= deadline:
+                break
+            sleep = self.controller.params.interval_s - (time.time() - t0)
+            if sleep > 0:
+                self._stop.wait(sleep)
+
+    def start(self) -> None:
+        self._stop.clear()
+        self._thread = threading.Thread(target=self.run, daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None

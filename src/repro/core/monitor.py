@@ -1,0 +1,160 @@
+"""Memory monitoring agents (the paper's collectd analogue).
+
+Each agent samples one node's memory state and emits a ``MemorySample``;
+``to_json``/``from_json`` mirror the paper's JSON-over-Kafka metric
+encoding so samples can travel the :mod:`repro.core.bus` unchanged.
+
+Three agents:
+
+* :class:`HostMemoryMonitor` -- the real thing, reads ``/proc/meminfo``
+  (psutil fallback).  On a TPU worker this is the host-RAM view that
+  governs the dataset shard cache.
+* :class:`DeviceMemoryMonitor` -- per-accelerator HBM view via
+  ``device.memory_stats()`` (present on TPU/GPU backends; returns None
+  fields on CPU).  Governs the serving KV-block pool.
+* :class:`SimulatedMonitor` -- trace- or callback-driven, used by the
+  cluster simulator and by every deterministic test.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, asdict
+from typing import Callable, Iterator, Optional, Protocol, Sequence
+
+
+@dataclass(frozen=True)
+class MemorySample:
+    """One observation of a node's memory state (bytes)."""
+
+    node: str
+    timestamp: float
+    used: float           # v_i: total used incl. in-memory storage
+    total: float          # M
+    storage_used: float = 0.0   # portion attributable to managed stores
+    swap_used: float = 0.0
+
+    @property
+    def utilization(self) -> float:
+        return self.used / self.total if self.total else 0.0
+
+    @property
+    def compute_used(self) -> float:
+        """Usage attributable to the priority (compute) tenant."""
+        return max(self.used - self.storage_used, 0.0)
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self))
+
+    @staticmethod
+    def from_json(payload: str) -> "MemorySample":
+        return MemorySample(**json.loads(payload))
+
+
+class MemoryMonitor(Protocol):
+    def sample(self) -> MemorySample: ...
+
+
+def _read_proc_meminfo() -> Optional[dict]:
+    try:
+        with open("/proc/meminfo") as fh:
+            fields = {}
+            for line in fh:
+                key, _, rest = line.partition(":")
+                fields[key.strip()] = int(rest.strip().split()[0]) * 1024
+            return fields
+    except (OSError, ValueError, IndexError):
+        return None
+
+
+class HostMemoryMonitor:
+    """Samples host RAM from /proc/meminfo (psutil fallback)."""
+
+    def __init__(self, node: str = "localhost",
+                 storage_used_fn: Optional[Callable[[], float]] = None):
+        self.node = node
+        self._storage_used_fn = storage_used_fn or (lambda: 0.0)
+
+    def sample(self) -> MemorySample:
+        info = _read_proc_meminfo()
+        if info is not None:
+            total = float(info["MemTotal"])
+            avail = float(info.get("MemAvailable", info.get("MemFree", 0)))
+            swap = float(info.get("SwapTotal", 0) - info.get("SwapFree", 0))
+            used = total - avail
+        else:  # pragma: no cover - psutil fallback path
+            import psutil
+            vm = psutil.virtual_memory()
+            total, used = float(vm.total), float(vm.total - vm.available)
+            swap = float(psutil.swap_memory().used)
+        return MemorySample(
+            node=self.node, timestamp=time.time(), used=used, total=total,
+            storage_used=float(self._storage_used_fn()), swap_used=swap,
+        )
+
+
+class DeviceMemoryMonitor:
+    """Samples one accelerator's HBM via ``device.memory_stats()``.
+
+    On CPU backends memory_stats() is unavailable; ``total`` falls back to
+    the configured ``assumed_total`` so control logic stays exercisable.
+    """
+
+    def __init__(self, device, node: Optional[str] = None,
+                 assumed_total: float = 16 * 2**30,
+                 storage_used_fn: Optional[Callable[[], float]] = None):
+        self.device = device
+        self.node = node or f"{device.platform}:{device.id}"
+        self.assumed_total = assumed_total
+        self._storage_used_fn = storage_used_fn or (lambda: 0.0)
+
+    def sample(self) -> MemorySample:
+        stats = {}
+        try:
+            stats = self.device.memory_stats() or {}
+        except Exception:
+            stats = {}
+        total = float(stats.get("bytes_limit", self.assumed_total))
+        used = float(stats.get("bytes_in_use", 0.0))
+        return MemorySample(
+            node=self.node, timestamp=time.time(), used=used, total=total,
+            storage_used=float(self._storage_used_fn()),
+        )
+
+
+class SimulatedMonitor:
+    """Trace- or callback-driven monitor for simulation and tests."""
+
+    def __init__(
+        self,
+        node: str,
+        total: float,
+        usage: Sequence[float] | Callable[[int], float],
+        storage_used_fn: Optional[Callable[[], float]] = None,
+        dt: float = 0.1,
+    ):
+        self.node = node
+        self.total = float(total)
+        self._usage = usage
+        self._storage_used_fn = storage_used_fn or (lambda: 0.0)
+        self._dt = dt
+        self._i = 0
+
+    def sample(self) -> MemorySample:
+        if callable(self._usage):
+            used = float(self._usage(self._i))
+        else:
+            used = float(self._usage[min(self._i, len(self._usage) - 1)])
+        s = MemorySample(
+            node=self.node, timestamp=self._i * self._dt,
+            used=used + self._storage_used_fn(),
+            total=self.total, storage_used=float(self._storage_used_fn()),
+            swap_used=max(0.0, used + self._storage_used_fn() - self.total),
+        )
+        self._i += 1
+        return s
+
+    def __iter__(self) -> Iterator[MemorySample]:
+        while True:
+            yield self.sample()

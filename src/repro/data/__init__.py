@@ -1,0 +1,6 @@
+"""Data substrate: shard store + DynIMS-managed cache + pipeline."""
+
+from .pipeline import DataPipeline, PipelineConfig
+from .shard_store import ShardStore, write_corpus
+
+__all__ = ["DataPipeline", "PipelineConfig", "ShardStore", "write_corpus"]

@@ -1,0 +1,122 @@
+"""Input pipeline: deterministic sampling over a DynIMS-managed cache.
+
+This is the paper's architecture transplanted to a training job's input
+path: the shard store is the backing tier (OrangeFS), the in-host-RAM
+:class:`~repro.core.store.ShardCache` is the Alluxio worker, and a
+:class:`~repro.core.controller.ControlPlane` resizes it every interval
+so the *training process* (the priority tenant: parameters, optimizer
+mirrors, compilation workspace, staging buffers) never hits memory
+pressure while the cache soaks up all remaining host RAM.
+
+Sampling is a deterministic function of (seed, step): restart-safe --
+after checkpoint restore the pipeline resumes exactly (no state files).
+A background prefetcher warms the cache ``prefetch_depth`` steps ahead.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import numpy as np
+
+from ..core.controller import ControlPlane
+from ..core.monitor import HostMemoryMonitor
+from ..core.store import ShardCache, StoreRegistry
+from .shard_store import ShardStore
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    batch_size: int
+    seq_len: int
+    seed: int = 0
+    cache_bytes: float = 256 * 2**20
+    eviction: str = "lfu"
+    prefetch_depth: int = 2
+    dynims: bool = True          # attach the cache to a control plane
+
+
+class DataPipeline:
+    def __init__(self, store: ShardStore, cfg: PipelineConfig,
+                 plane: Optional[ControlPlane] = None,
+                 node: str = "localhost"):
+        self.store = store
+        self.cfg = cfg
+        self.cache = ShardCache("dataset-cache", capacity=cfg.cache_bytes,
+                                policy=cfg.eviction, priority=0)
+        self._registry = StoreRegistry()
+        self._registry.register(self.cache, max_bytes=cfg.cache_bytes)
+        self.plane = plane
+        if plane is not None and cfg.dynims:
+            plane.attach(node,
+                         HostMemoryMonitor(node,
+                                           storage_used_fn=self.cache.used),
+                         self._registry, u0=cfg.cache_bytes)
+        self._prefetch_q: "queue.Queue[int]" = queue.Queue(maxsize=64)
+        self._stop = threading.Event()
+        self._prefetcher: Optional[threading.Thread] = None
+
+    # ---- deterministic addressing -----------------------------------------
+    def _plan(self, step: int) -> np.ndarray:
+        """(batch, 2) array of (shard_id, offset) for one step."""
+        man = self.store.manifest
+        rng = np.random.default_rng((self.cfg.seed, step))
+        per_shard = man.tokens_per_shard - self.cfg.seq_len - 1
+        shards = rng.integers(0, man.n_shards, self.cfg.batch_size)
+        offsets = rng.integers(0, max(per_shard, 1), self.cfg.batch_size)
+        return np.stack([shards, offsets], axis=1)
+
+    def _shard(self, shard_id: int) -> np.ndarray:
+        return self.cache.get(int(shard_id),
+                              loader=lambda: self.store.read(int(shard_id)))
+
+    def batch(self, step: int) -> dict:
+        """Deterministic batch for ``step`` (restart-safe)."""
+        if self._prefetcher is None and self.cfg.prefetch_depth:
+            self._start_prefetcher(step)
+        plan = self._plan(step)
+        for future_step in range(step + 1, step + 1 + self.cfg.prefetch_depth):
+            for sid in np.unique(self._plan(future_step)[:, 0]):
+                try:
+                    self._prefetch_q.put_nowait(int(sid))
+                except queue.Full:
+                    break
+        rows = []
+        for sid, off in plan:
+            shard = self._shard(sid)
+            rows.append(shard[off: off + self.cfg.seq_len + 1])
+        arr = np.stack(rows)
+        return {"tokens": arr[:, :-1].astype(np.int32),
+                "labels": arr[:, 1:].astype(np.int32)}
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+    # ---- background prefetch -------------------------------------------------
+    def _start_prefetcher(self, step0: int) -> None:
+        def run():
+            while not self._stop.is_set():
+                try:
+                    sid = self._prefetch_q.get(timeout=0.2)
+                except queue.Empty:
+                    continue
+                if sid not in self.cache:
+                    self._shard(sid)
+        self._prefetcher = threading.Thread(target=run, daemon=True)
+        self._prefetcher.start()
+
+    def close(self) -> None:
+        self._stop.set()
+        if self._prefetcher is not None:
+            self._prefetcher.join(timeout=2.0)
+            self._prefetcher = None
+
+    @property
+    def hit_ratio(self) -> float:
+        return self.cache.stats.hit_ratio

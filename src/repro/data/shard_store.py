@@ -1,0 +1,62 @@
+"""On-disk tokenized shard store (the OrangeFS role in the paper).
+
+A corpus is a directory of fixed-size token shards (``shard-%05d.npy``)
+plus ``manifest.json``.  Reads are whole-shard (the unit the DynIMS-
+managed cache evicts -- matching Alluxio's block granularity).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Manifest:
+    n_shards: int
+    tokens_per_shard: int
+    vocab_size: int
+    dtype: str = "int32"
+
+    @property
+    def total_tokens(self) -> int:
+        return self.n_shards * self.tokens_per_shard
+
+
+def write_corpus(path: str, *, n_shards: int, tokens_per_shard: int,
+                 vocab_size: int, seed: int = 0) -> Manifest:
+    """Generate a synthetic tokenized corpus (deterministic)."""
+    os.makedirs(path, exist_ok=True)
+    rng = np.random.default_rng(seed)
+    for i in range(n_shards):
+        tokens = rng.integers(0, vocab_size, tokens_per_shard,
+                              dtype=np.int32)
+        tmp = os.path.join(path, f".tmp-shard-{i:05d}.npy")
+        np.save(tmp, tokens)
+        os.replace(tmp, os.path.join(path, f"shard-{i:05d}.npy"))
+    man = Manifest(n_shards=n_shards, tokens_per_shard=tokens_per_shard,
+                   vocab_size=vocab_size)
+    with open(os.path.join(path, "manifest.json"), "w") as fh:
+        json.dump(man.__dict__, fh)
+    return man
+
+
+class ShardStore:
+    def __init__(self, path: str):
+        self.path = path
+        with open(os.path.join(path, "manifest.json")) as fh:
+            self.manifest = Manifest(**json.load(fh))
+        self.reads = 0
+        self.bytes_read = 0
+
+    def read(self, shard_id: int) -> np.ndarray:
+        if not 0 <= shard_id < self.manifest.n_shards:
+            raise IndexError(shard_id)
+        arr = np.load(os.path.join(self.path, f"shard-{shard_id:05d}.npy"))
+        self.reads += 1
+        self.bytes_read += arr.nbytes
+        return arr

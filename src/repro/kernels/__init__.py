@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+The paper (DynIMS) has no kernel-level contribution -- these kernels are
+framework substrate for the serving/training paths the DynIMS-managed
+memory tiers feed (DESIGN.md §2):
+
+* flash_attention  -- 2D-tiled online-softmax attention (prefill/train)
+* decode_attention -- one-token-vs-cache attention with scalar-prefetch
+                      lengths (serving hot path over the KV pool)
+* ssm_scan         -- chunked selective scan (Mamba channels on the VPU)
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper, interpret-mode on CPU), ref.py (pure-jnp oracle).  Tests sweep
+shapes/dtypes and assert allclose against the oracle.
+"""
+
+from .decode_attention.ops import decode_attention_op
+from .flash_attention.ops import flash_attention_op
+from .ssm_scan.ops import ssm_scan_op
+
+__all__ = ["decode_attention_op", "flash_attention_op", "ssm_scan_op"]

@@ -1,0 +1,24 @@
+"""Jit'd public wrapper for the decode-attention kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import decode_attention
+from .ref import decode_attention_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k"))
+def decode_attention_op(q, k_cache, v_cache, lengths, *, window: int = 0,
+                        block_k: int = 256):
+    return decode_attention(q, k_cache, v_cache, lengths, window=window,
+                            block_k=block_k, interpret=_on_cpu())
+
+
+__all__ = ["decode_attention_op", "decode_attention_ref"]

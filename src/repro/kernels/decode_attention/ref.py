@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array, lengths: jax.Array, *,
+                         window: int = 0) -> jax.Array:
+    """q: (B,H,hd); caches: (B,S,KV,hd); lengths: (B,) int32.
+
+    Attends to positions [0, len_b) per sequence -> (B,H,hd), float32.
+    """
+    b, h, hd = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg,
+                        k_cache.astype(jnp.float32)) / (hd ** 0.5)
+    k_pos = jnp.arange(s)
+    valid = k_pos[None] < lengths[:, None]                   # (B,S)
+    if window:
+        valid &= k_pos[None] >= lengths[:, None] - window
+    logits = jnp.where(valid[:, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", w, v_cache.astype(jnp.float32))
+    return o.reshape(b, h, hd)

@@ -1,0 +1,31 @@
+"""Jit'd public wrapper for the flash-attention kernel.
+
+On TPU backends this compiles the Pallas kernel; on CPU (this container)
+it runs the same kernel body in interpret mode, so correctness of the
+blocking/masking/carry logic is validated even without hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention
+from .ref import attention_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k"))
+def flash_attention_op(q, k, v, *, causal: bool = True, window: int = 0,
+                       block_q: int = 128, block_k: int = 128):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=block_q, block_k=block_k,
+                           interpret=_on_cpu())
+
+
+__all__ = ["flash_attention_op", "attention_ref"]

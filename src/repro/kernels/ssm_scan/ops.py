@@ -1,0 +1,23 @@
+"""Jit'd public wrapper for the selective-scan kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import ssm_scan
+from .ref import ssm_scan_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_c"))
+def ssm_scan_op(decay, drive, h0, *, chunk: int = 64, block_c: int = 128):
+    return ssm_scan(decay, drive, h0, chunk=chunk, block_c=block_c,
+                    interpret=_on_cpu())
+
+
+__all__ = ["ssm_scan_op", "ssm_scan_ref"]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the chunked selective-scan (S6) kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(decay: jax.Array, drive: jax.Array,
+                 h0: jax.Array) -> jax.Array:
+    """decay/drive: (B,S,C,N); h0: (B,C,N) -> hidden states (B,S,C,N).
+
+    h_t = decay_t * h_{t-1} + drive_t, channel-diagonal (C independent
+    channels, N state dims per channel).  Sequential-in-time reference.
+    """
+    def step(h, xs):
+        a, b_ = xs
+        h = a * h + b_
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                         (decay.swapaxes(0, 1).astype(jnp.float32),
+                          drive.swapaxes(0, 1).astype(jnp.float32)))
+    return hs.swapaxes(0, 1)

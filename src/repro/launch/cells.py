@@ -1,0 +1,170 @@
+"""Benchmark-cell construction: (arch x shape x mesh) -> lowerable fn.
+
+One entry point, :func:`build_cell`, returns everything the dry-run
+needs: the step function, ShapeDtypeStruct inputs, and NamedSharding
+trees.  No device arrays are ever created for full-size configs.
+
+Cell kinds (configs/base.py):
+
+* train   -> the *real* train step (loss + grad + clip + AdamW), with
+             per-arch microbatching from :data:`DRYRUN_SETTINGS`,
+* prefill -> batched forward (logits), the serving prefill phase,
+* decode  -> one-token serve step over the full-length KV cache.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs import get_config, get_shape
+from ..configs.base import ArchConfig, InputShape
+from ..models import decode as D
+from ..models.params import Axes, axes_for, param_shapes, param_specs
+from ..models.transformer import Model
+from ..optim.adamw import AdamWState, opt_state_specs
+from ..train.step import TrainStepConfig, TrainState, build_train_step
+
+
+@dataclass(frozen=True)
+class CellSettings:
+    microbatches: int = 1
+    remat: str = "full"
+    attn_impl: str = "chunked"
+    attn_chunk: int = 1024
+    params_dtype: str = "bfloat16"
+    seq_parallel: bool = False
+
+
+# Per-arch dry-run knobs for the train_4k cell (1M tokens/step).  The
+# microbatch count is the activation-memory lever: chosen so layer-
+# boundary activations fit ~16 GB/chip HBM alongside params + moments.
+DRYRUN_SETTINGS: Dict[Tuple[str, str], CellSettings] = {
+    ("mistral-large-123b", "train_4k"): CellSettings(microbatches=16),
+    ("dbrx-132b", "train_4k"): CellSettings(microbatches=2),
+    ("llama-3.2-vision-11b", "train_4k"): CellSettings(microbatches=4),
+    ("whisper-large-v3", "train_4k"): CellSettings(microbatches=4),
+    ("qwen2-moe-a2.7b", "train_4k"): CellSettings(microbatches=2),
+    ("hymba-1.5b", "train_4k"): CellSettings(microbatches=2),
+}
+
+
+def cell_settings(arch: str, shape: str) -> CellSettings:
+    return DRYRUN_SETTINGS.get((arch, shape), CellSettings())
+
+
+def sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype),
+                                sharding=sharding)
+
+
+def _shard(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_inputs(cfg: ArchConfig, shape: InputShape, axes: Axes, mesh,
+                 *, with_labels: bool):
+    """ShapeDtypeStructs (+shardings) for a train/prefill batch."""
+    b, s = shape.global_batch, shape.seq_len
+    bspec = axes.batch_spec(None)
+    tok = sds((b, s), "int32", NamedSharding(mesh, bspec))
+    batch = {"tokens": tok}
+    if with_labels:
+        batch["labels"] = tok
+    if cfg.family == "audio":
+        batch["frames"] = sds((b, s, cfg.d_model), "bfloat16",
+                              NamedSharding(mesh, axes.batch_spec(None, None)))
+    if cfg.family == "vlm":
+        batch["images"] = sds((b, cfg.vision_tokens, cfg.d_model),
+                              "bfloat16",
+                              NamedSharding(mesh, axes.batch_spec(None, None)))
+    return batch
+
+
+def build_cell(arch: str, shape_name: str, mesh,
+               settings: Optional[CellSettings] = None):
+    """-> (fn, example_inputs (tuple of SDS trees), description dict)."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if not cfg.supports_shape(shape):
+        raise ValueError(
+            f"{arch} skips {shape_name} (full attention at 500k; "
+            "DESIGN.md §5)")
+    st = settings or cell_settings(arch, shape_name)
+    axes = axes_for(mesh)
+    model = Model(cfg, axes=axes, remat=st.remat, attn_impl=st.attn_impl,
+                  attn_chunk=st.attn_chunk)
+    model.seq_parallel = st.seq_parallel
+    pdtype = jnp.dtype(st.params_dtype)
+    pspecs = model.specs()
+    pshapes = param_shapes(model.schema(), pdtype)
+    pshard = _shard(mesh, pspecs)
+    pshapes = jax.tree.map(
+        lambda x, sh: sds(x.shape, x.dtype, sh), pshapes, pshard)
+
+    desc = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+            "n_params": cfg.n_params(),
+            "n_active_params": cfg.n_active_params(),
+            # decode steps process one token per sequence
+            "tokens": (shape.global_batch if shape.kind == "decode"
+                       else shape.tokens),
+            "settings": st.__dict__,
+            "sharding_report": cfg.sharding_report(
+                *_mesh_dm(mesh))}
+
+    if shape.kind == "train":
+        tcfg = TrainStepConfig(microbatches=st.microbatches)
+        step = build_train_step(model, tcfg)
+        mu = jax.tree.map(lambda x: sds(x.shape, "float32", x.sharding),
+                          pshapes)
+        state = TrainState(
+            adam=AdamWState(step=sds((), "int32",
+                                     NamedSharding(mesh, P())),
+                            mu=mu, nu=mu),
+            compression=None)
+        batch = batch_inputs(cfg, shape, axes, mesh, with_labels=True)
+        return step, (pshapes, state, batch), desc
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            logits, _ = model.forward(params, batch)
+            return logits
+        batch = batch_inputs(cfg, shape, axes, mesh, with_labels=False)
+        return prefill_fn, (pshapes, batch), desc
+
+    # decode
+    sschema = D.state_schema(model, shape.global_batch, shape.seq_len)
+    sspecs = D.param_specs(sschema)
+    sshapes = D.param_shapes(sschema, jnp.bfloat16)
+    sshard = _shard(mesh, sspecs)
+    sshapes = jax.tree.map(lambda x, sh: sds(x.shape, x.dtype, sh),
+                           sshapes, sshard)
+    tok = sds((shape.global_batch, 1), "int32",
+              NamedSharding(mesh, axes.batch_spec(None)
+                            if shape.global_batch > 1 else P(None, None)))
+
+    # weight-stationary decode: replicate the one-token activations so
+    # the 256-way-sharded weights are never gathered (§Perf cell C2)
+    model._replicate_acts = True
+    tok = sds((shape.global_batch, 1), "int32",
+              NamedSharding(mesh, P(None, None)))
+
+    def serve_fn(params, state, tokens):
+        # benchmark decode: synchronized positions -> copy-free cache
+        # update; donate the state so caches update in place
+        return D.decode_step(model, params, state, tokens,
+                             uniform_pos=True)
+
+    serve_fn.donate_argnums = (1,)
+    return serve_fn, (pshapes, sshapes, tok), desc
+
+
+def _mesh_dm(mesh) -> Tuple[int, int]:
+    names = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return names.get("data", 1), names.get("model", 1)

@@ -1,0 +1,9 @@
+"""Model zoo: every assigned architecture family in pure JAX."""
+
+from .params import (Axes, ParamDef, Schema, axes_for, count_params,
+                     init_params, param_shapes, param_specs, stack_schema)
+from .transformer import Model
+
+__all__ = ["Axes", "Model", "ParamDef", "Schema", "axes_for",
+           "count_params", "init_params", "param_shapes", "param_specs",
+           "stack_schema"]

@@ -1,0 +1,274 @@
+"""Grouped-query attention: schemas, train/prefill/decode paths, masks.
+
+Three execution paths, one math:
+
+* ``attention_dense``   -- materialized logits; smoke tests & tiny shapes.
+* ``attention_chunked`` -- lax.scan over KV chunks with online softmax
+  (flash-attention recurrence in pure JAX).  This is the default for
+  large shapes: activation memory is O(S * chunk) instead of O(S^2), so
+  the dry-run memory/roofline profile matches what the Pallas kernel
+  (kernels/flash_attention) achieves on real TPUs.
+* ``attention_decode``  -- one query token against a KV cache.
+
+GQA sharding: query heads shard over the ``model`` axis when divisible;
+KV projections stay replicated over ``model`` when ``n_kv_heads % tp != 0``
+(Megatron-style KV replication, DESIGN.md §4) -- each shard then holds
+full K/V and its slice of query heads, so no collective is needed inside
+the attention body.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from .layers import apply_rope
+from .params import Axes, ParamDef, Schema
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _attn_tp(cfg: ArchConfig, axes: Axes, tp_size_hint: int = 16):
+    """(q_heads_axis, kv_heads_axis) honoring the divisibility policy."""
+    if axes.tp is None or cfg.n_heads % tp_size_hint:
+        return None, None
+    kv_axis = axes.tp if cfg.n_kv_heads % tp_size_hint == 0 else None
+    return axes.tp, kv_axis
+
+
+def attention_schema(cfg: ArchConfig, axes: Axes, *,
+                     cross: bool = False) -> Schema:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q_tp, kv_tp = _attn_tp(cfg, axes)
+    sch: Schema = {
+        "wq": ParamDef((d, h, hd), P(axes.fsdp, q_tp, None)),
+        "wk": ParamDef((d, kv, hd), P(axes.fsdp, kv_tp, None)),
+        "wv": ParamDef((d, kv, hd), P(axes.fsdp, kv_tp, None)),
+        "wo": ParamDef((h, hd, d), P(q_tp, None, axes.fsdp)),
+    }
+    if cfg.qkv_bias and not cross:
+        sch["bq"] = ParamDef((h, hd), P(q_tp, None), init="zeros")
+        sch["bk"] = ParamDef((kv, hd), P(kv_tp, None), init="zeros")
+        sch["bv"] = ParamDef((kv, hd), P(kv_tp, None), init="zeros")
+    return sch
+
+
+def qkv_project(params: Schema, xq: jax.Array, xkv: jax.Array,
+                cfg: ArchConfig, q_positions: Optional[jax.Array] = None,
+                k_positions: Optional[jax.Array] = None,
+                rope: bool = True) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    q = jnp.einsum("bsd,dhk->bshk", xq, params["wq"],
+                   preferred_element_type=F32).astype(xq.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", xkv, params["wk"],
+                   preferred_element_type=F32).astype(xq.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", xkv, params["wv"],
+                   preferred_element_type=F32).astype(xq.dtype)
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if rope:
+        q = apply_rope(q, q_positions, cfg.rope_theta)
+        k = apply_rope(k, k_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def out_project(params: Schema, o: jax.Array, dtype) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"],
+                      preferred_element_type=F32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+def make_mask(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool,
+              window: int = 0) -> jax.Array:
+    """(..., Sq, Skv) boolean mask; True = attend."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    mask = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    return mask
+
+
+def _softcap(logits: jax.Array, cap: float) -> jax.Array:
+    if cap:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Dense path (smoke tests, tiny shapes)
+# ---------------------------------------------------------------------------
+
+def attention_dense(q: jax.Array, k: jax.Array, v: jax.Array,
+                    mask: Optional[jax.Array], cfg: ArchConfig) -> jax.Array:
+    """q: (B,Sq,H,hd); k/v: (B,Skv,KV,hd); mask: (Sq,Skv) or None."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=F32) / (hd ** 0.5)
+    logits = _softcap(logits, cfg.attn_logit_softcap)
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v, preferred_element_type=F32)
+    return o.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax path (the flash recurrence in pure JAX)
+# ---------------------------------------------------------------------------
+
+class _Carry(NamedTuple):
+    m: jax.Array       # running max         (B, KV, G, Sq)
+    l: jax.Array       # running sum-exp     (B, KV, G, Sq)
+    acc: jax.Array     # running weighted V  (B, KV, G, Sq, hd)
+
+
+def attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
+                      q_pos: jax.Array, k_pos: jax.Array, cfg: ArchConfig, *,
+                      causal: bool, window: int = 0,
+                      chunk: int = 1024) -> jax.Array:
+    """Flash-style attention: scan over KV chunks, O(Sq*chunk) memory."""
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    chunk = min(chunk, skv)
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-10 ** 9)
+    qg = (q.reshape(b, sq, kvh, g, hd).astype(F32)
+          .transpose(0, 2, 3, 1, 4))                        # (B,KV,G,Sq,hd)
+    kc = k.reshape(b, n_chunks, chunk, kvh, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, n_chunks, chunk, kvh, hd).transpose(1, 0, 3, 2, 4)
+    kpc = k_pos.reshape(n_chunks, chunk)
+
+    init = _Carry(
+        m=jnp.full((b, kvh, g, sq), NEG_INF, F32),
+        l=jnp.zeros((b, kvh, g, sq), F32),
+        acc=jnp.zeros((b, kvh, g, sq, hd), F32),
+    )
+    scale = 1.0 / (hd ** 0.5)
+
+    def step(carry: _Carry, xs):
+        kj, vj, kp = xs                                     # (B,KV,C,hd), (C,)
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qg, kj.astype(F32)) * scale
+        s = _softcap(s, cfg.attn_logit_softcap)
+        mask = make_mask(q_pos, kp, causal=causal, window=window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(carry.m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(carry.m - m_new)
+        l_new = carry.l * corr + p.sum(-1)
+        acc_new = carry.acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bkcd->bkgqd", p, vj.astype(F32))
+        return _Carry(m_new, l_new, acc_new), None
+
+    carry, _ = jax.lax.scan(step, init, (kc, vc, kpc))
+    o = carry.acc / jnp.maximum(carry.l, 1e-30)[..., None]
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode path (one token vs. a cache)
+# ---------------------------------------------------------------------------
+
+def attention_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, cfg: ArchConfig, *,
+                     window: int = 0) -> jax.Array:
+    """q: (B,1,H,hd); caches: (B,S,KV,hd); cache_len: scalar or (B,) int.
+
+    The caller writes the new token's K/V at position ``cache_len``
+    first; attention then covers [0, cache_len] per sequence (static
+    shapes, masked beyond).  Per-sequence lengths are what continuous
+    batching serves from one compiled program.
+    """
+    b, _, h, hd = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg.astype(F32),
+                        k_cache.astype(F32)) / (hd ** 0.5)
+    logits = _softcap(logits, cfg.attn_logit_softcap)
+    k_pos = jnp.arange(s)
+    lens = jnp.broadcast_to(jnp.asarray(cache_len), (b,))
+    valid = k_pos[None, :] <= lens[:, None]                  # (B,S)
+    if window:
+        valid &= k_pos[None, :] > lens[:, None] - window
+    logits = jnp.where(valid[:, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", w, v_cache.astype(F32))
+    return o.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def update_kv_cache(k_cache: jax.Array, v_cache: jax.Array, k: jax.Array,
+                    v: jax.Array, cache_len: jax.Array,
+                    uniform: bool = False):
+    """Write one token's K/V at per-sequence position(s) ``cache_len``.
+
+    ``uniform=True`` asserts every sequence sits at the same position
+    (bulk decode benchmarks; synchronized batches) and uses a masked
+    ``where``-update over the sequence dim.  Rationale (measured on
+    mistral decode_32k, EXPERIMENTS.md §Perf cell C):
+
+    * the general per-sequence path lowers to a scatter; a scatter whose
+      operand is also read by attention in the same loop body makes XLA
+      COPY the full stacked cache every layer (489 GiB/chip/step),
+    * a dynamic-update-slice at a *traced* position into the
+      ``model``-sharded sequence dim makes SPMD all-gather the cache
+      (worse still: 5.3 s memory term),
+    * the masked where is elementwise, shard-local on every mesh layout,
+      and fuses with the attention read that already streams the cache.
+
+    Continuous batching keeps the scatter path; it pays for generality
+    only where generality is used.
+    """
+    if uniform:
+        pos = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32),
+                               (k_cache.shape[0],))[0]
+        onpos = (jnp.arange(k_cache.shape[1]) == pos)[None, :, None, None]
+        k_cache = jnp.where(onpos, k.astype(k_cache.dtype), k_cache)
+        v_cache = jnp.where(onpos, v.astype(v_cache.dtype), v_cache)
+        return k_cache, v_cache
+    b = k_cache.shape[0]
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+
+    def one(cache_b, new_b, p):
+        return jax.lax.dynamic_update_slice(
+            cache_b, new_b.astype(cache_b.dtype),
+            (p, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)))
+
+    k_cache = jax.vmap(one)(k_cache, k, lens)
+    v_cache = jax.vmap(one)(v_cache, v, lens)
+    return k_cache, v_cache
+
+
+def kv_cache_spec(cfg: ArchConfig, axes: Axes, batch: int,
+                  tp_size_hint: int = 16) -> P:
+    """PartitionSpec for a (L, B, S, KV, hd) cache.
+
+    batch > 1: shard batch over the data axis.  batch == 1 (long-context
+    decode): shard the *sequence* dim over data instead (ring layout).
+    KV heads shard over model only when divisible.
+    """
+    _, kv_tp = _attn_tp(cfg, axes, tp_size_hint)
+    if batch == 1:
+        return P(None, None, axes.fsdp, kv_tp, None)
+    return P(None, axes.batch if len(axes.batch) > 1 else axes.batch[0],
+             None, kv_tp, None)

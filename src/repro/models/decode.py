@@ -1,0 +1,471 @@
+"""Serving decode: KV caches / recurrent state + one-token step.
+
+``state_schema(model, batch, max_len)`` declares the decode state with
+the same ParamDef machinery as parameters, so shapes, shardings, and
+ShapeDtypeStruct stand-ins stay consistent across smoke tests and the
+512-device dry-run.  The state pytree mirrors the parameter stack
+structure (flat / grouped / nested), letting one ``lax.scan`` walk
+params and cache slices together.
+
+Sharding of caches (DESIGN.md §4):
+
+* batch > 1: cache batch dim shards over the batch axes.
+* batch == 1 (long_500k): the *sequence* dim shards over ``data``
+  (ring layout); softmax over the sharded dim becomes an XLA
+  all-reduce of partial (max, sum, weighted-V) -- visible in the
+  collective roofline term.
+* KV heads shard over ``model`` only when divisible; SSM states shard
+  their channel dim.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from . import ssm
+from .attention import (_attn_tp, attention_decode, out_project,
+                        qkv_project, update_kv_cache)
+from .layers import apply_mlp, apply_norm, embed_tokens, unembed
+from .moe import moe_apply
+from .params import (Axes, ParamDef, Schema, init_params, param_shapes,
+                     param_specs, stack_schema)
+from .transformer import Model, _rms
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# State schema
+# ---------------------------------------------------------------------------
+
+def _batch_axis(axes: Axes, batch: int):
+    if batch == 1:
+        return None
+    return axes.batch if len(axes.batch) > 1 else axes.batch[0]
+
+
+def _kv_def(cfg: ArchConfig, axes: Axes, batch: int, seq: int,
+            kv_heads: Optional[int] = None,
+            cache_dtype: str = "bfloat16") -> ParamDef:
+    """(B, S, KV, hd) cache leaf.
+
+    Decode caches are the largest serving tensors (mistral decode_32k:
+    ~1.5 TB global), so both mesh axes must carve them:
+
+    * batch > 1: batch shards over ``data``; KV heads shard over
+      ``model`` when divisible, otherwise the *sequence* dim shards over
+      ``model`` (attention softmax then reduces over a sharded dim --
+      XLA inserts the partial-softmax all-reduce; §Roofline shows it).
+    * batch == 1 (long_500k): sequence shards over every available axis.
+    """
+    _, kv_tp = _attn_tp(cfg, axes)
+    kv = kv_heads or cfg.n_kv_heads
+    if batch == 1:
+        seq_axes = [a for a in (axes.fsdp, axes.tp if kv_tp is None else
+                                None) if a]
+        seq_sharding = (tuple(seq_axes) if len(seq_axes) > 1 else
+                        (seq_axes[0] if seq_axes else None))
+        spec = P(None, seq_sharding, kv_tp, None)
+    else:
+        seq_ax = axes.tp if kv_tp is None else None
+        spec = P(_batch_axis(axes, batch), seq_ax, kv_tp, None)
+    return ParamDef((batch, seq, kv, cfg.head_dim), spec, init="zeros",
+                    dtype=cache_dtype)
+
+
+def _self_cache(cfg: ArchConfig, axes: Axes, batch: int, seq: int,
+                cache_dtype: str = "bfloat16") -> Schema:
+    return {"k": _kv_def(cfg, axes, batch, seq, cache_dtype=cache_dtype),
+            "v": _kv_def(cfg, axes, batch, seq, cache_dtype=cache_dtype)}
+
+
+def _mamba_state(cfg: ArchConfig, axes: Axes, batch: int) -> Schema:
+    inner = cfg.ssm_expand * cfg.d_model
+    tp = axes.tp if (axes.tp and inner % 16 == 0) else None
+    ba = _batch_axis(axes, batch)
+    return {
+        "h": ParamDef((batch, inner, cfg.ssm_state), P(ba, tp, None),
+                      init="zeros", dtype="float32"),
+        "conv": ParamDef((batch, cfg.ssm_conv - 1, inner), P(ba, None, tp),
+                         init="zeros", dtype="float32"),
+    }
+
+
+def _mlstm_state(cfg: ArchConfig, axes: Axes, batch: int) -> Schema:
+    inner = cfg.ssm_expand * cfg.d_model
+    h = cfg.n_heads
+    hd = inner // h
+    tp = axes.tp if (axes.tp and hd % 16 == 0) else None
+    ba = _batch_axis(axes, batch)
+    return {
+        "c": ParamDef((batch, h, hd, hd), P(ba, None, None, tp),
+                      init="zeros", dtype="float32"),
+        "n": ParamDef((batch, h, hd), P(ba, None, None), init="zeros",
+                      dtype="float32"),
+        "m": ParamDef((batch, h), P(ba, None), init="const", scale=-1e30,
+                      dtype="float32"),
+    }
+
+
+def _slstm_state(cfg: ArchConfig, axes: Axes, batch: int) -> Schema:
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    ba = _batch_axis(axes, batch)
+    sch = {k: ParamDef((batch, h, hd), P(ba, None, None), init="zeros",
+                       dtype="float32")
+           for k in ("c", "n", "h")}
+    sch["m"] = ParamDef((batch, h, hd), P(ba, None, None), init="const",
+                        scale=-1e30, dtype="float32")
+    return sch
+
+
+def state_schema(model: Model, batch: int, max_len: int,
+                 cache_dtype: str = "bfloat16") -> Schema:
+    """Decode-state declaration for one (arch, batch, max_len)."""
+    cfg, axes = model.cfg, model.axes
+    fam = cfg.family
+    # per-sequence positions: continuous batching serves mixed-progress
+    # sequences from one compiled program
+    sch: Schema = {"pos": ParamDef((batch,), P(_batch_axis(axes, batch)),
+                                   init="zeros", dtype="int32")}
+    if fam in ("dense", "moe"):
+        sch["layers"] = _stack_like_params(
+            model, _self_cache(cfg, axes, batch, max_len, cache_dtype))
+    elif fam == "hybrid":
+        per_layer = {"attn": _self_cache(cfg, axes, batch, max_len,
+                                        cache_dtype),
+                     "mamba": _mamba_state(cfg, axes, batch)}
+        sch["layers"] = _stack_like_params(model, per_layer)
+    elif fam == "ssm":
+        pair: Schema = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            pair[f"{i}_{kind}"] = (_mlstm_state(cfg, axes, batch)
+                                   if kind == "mlstm"
+                                   else _slstm_state(cfg, axes, batch))
+        sch["layers"] = stack_schema(pair,
+                                     cfg.n_layers // len(cfg.block_pattern))
+    elif fam == "vlm":
+        g = cfg.cross_attn_group
+        n_groups = cfg.n_layers // g
+        sch["layers"] = stack_schema(
+            {"selfs": stack_schema(
+                _self_cache(cfg, axes, batch, max_len, cache_dtype), g),
+             "cross_k": _kv_def(cfg, axes, batch, cfg.vision_tokens,
+                                cache_dtype=cache_dtype),
+             "cross_v": _kv_def(cfg, axes, batch, cfg.vision_tokens,
+                                cache_dtype=cache_dtype)},
+            n_groups)
+    elif fam == "audio":
+        enc_len = cfg.vision_tokens                # encoder frames
+        sch["enc_len"] = ParamDef((), P(), init="zeros", dtype="int32")
+        sch["layers"] = stack_schema(
+            {**_self_cache(cfg, axes, batch, max_len, cache_dtype),
+             "cross_k": _kv_def(cfg, axes, batch, enc_len,
+                                cache_dtype=cache_dtype),
+             "cross_v": _kv_def(cfg, axes, batch, enc_len,
+                                cache_dtype=cache_dtype)},
+            cfg.n_layers)
+    else:
+        raise ValueError(fam)
+    return sch
+
+
+def _stack_like_params(model: Model, per_layer: Schema) -> Schema:
+    """Mirror the windowed group/tail structure of the param stack."""
+    cfg = model.cfg
+    period = cfg.global_every
+    if not (cfg.sliding_window and period) or cfg.n_layers < period:
+        return {"flat": stack_schema(per_layer, cfg.n_layers)}
+    n_groups, n_tail = divmod(cfg.n_layers, period)
+    sch: Schema = {"groups": stack_schema(
+        {"locals": stack_schema(per_layer, period - 1), "glob": per_layer},
+        n_groups)}
+    if n_tail:
+        sch["tail"] = stack_schema(per_layer, n_tail)
+    return sch
+
+
+def init_state(model: Model, batch: int, max_len: int,
+               key: Optional[jax.Array] = None,
+               cache_dtype: str = "bfloat16"):
+    return init_params(state_schema(model, batch, max_len, cache_dtype),
+                       key if key is not None else jax.random.key(0),
+                       jnp.float32)
+
+
+def state_specs(model: Model, batch: int, max_len: int):
+    return param_specs(state_schema(model, batch, max_len))
+
+
+def state_shapes(model: Model, batch: int, max_len: int):
+    return param_shapes(state_schema(model, batch, max_len), jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# One-token decode step
+# ---------------------------------------------------------------------------
+
+def decode_step(model: Model, params, state, tokens: jax.Array,
+                uniform_pos: bool = False) -> Tuple[jax.Array, Dict]:
+    """tokens: (B, 1) -> (logits (B, 1, V), new state).
+
+    ``uniform_pos=True``: all sequences share one position (bulk
+    benchmark decode) -- enables the copy-free single-DUS cache update
+    (see attention.update_kv_cache).
+    """
+    cfg = model.cfg
+    model._uniform_pos = uniform_pos
+    fam = cfg.family
+    pos = state["pos"]
+    x = embed_tokens(params["embed"], tokens, cfg,
+                     dtype=model._adtype(params))
+    x = model._cact(x)
+    q_pos = pos[:, None].astype(jnp.int32)        # (B,1) rope positions
+
+    if fam in ("dense", "moe"):
+        x, layers = _decode_windowed(model, params["layers"],
+                                     state["layers"], x, q_pos, pos,
+                                     _self_layer_decode)
+    elif fam == "hybrid":
+        x, layers = _decode_windowed(model, params["layers"],
+                                     state["layers"], x, q_pos, pos,
+                                     _hybrid_layer_decode)
+    elif fam == "ssm":
+        x, layers = _decode_ssm(model, params["layers"], state["layers"], x)
+    elif fam == "vlm":
+        x, layers = _decode_vlm(model, params["layers"], state["layers"],
+                                x, q_pos, pos)
+    elif fam == "audio":
+        x, layers = _decode_audio(model, params["layers"], state["layers"],
+                                  x, q_pos, pos, state["enc_len"])
+    else:
+        raise ValueError(fam)
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = unembed(params["embed"], x, cfg)
+    new_state = {"pos": pos + 1, "layers": layers}
+    if "enc_len" in state:
+        new_state["enc_len"] = state["enc_len"]
+    return logits, new_state
+
+
+def _self_layer_decode(model: Model, p, c, x, q_pos, pos, window: int):
+    cfg = model.cfg
+    h = apply_norm(p["attn_norm"], x, cfg)
+    q, k, v = qkv_project(p["attn"], h, h, cfg, q_positions=q_pos,
+                          k_positions=q_pos)
+    kc, vc = update_kv_cache(c["k"], c["v"], k, v, pos,
+                             uniform=getattr(model, "_uniform_pos", False))
+    o = attention_decode(q, kc, vc, pos, cfg, window=window)
+    x = x + out_project(p["attn"], o, x.dtype)
+    h = apply_norm(p["mlp_norm"], x, cfg)
+    if cfg.is_moe:
+        h, _ = moe_apply(p["moe"], h, cfg)
+    else:
+        h = apply_mlp(p["mlp"], h, cfg)
+    return x + h, {"k": kc, "v": vc}
+
+
+def _hybrid_layer_decode(model: Model, p, c, x, q_pos, pos, window: int):
+    cfg = model.cfg
+    h = apply_norm(p["norm"], x, cfg)
+    q, k, v = qkv_project(p["attn"], h, h, cfg, q_positions=q_pos,
+                          k_positions=q_pos)
+    kc, vc = update_kv_cache(c["attn"]["k"], c["attn"]["v"], k, v, pos,
+                             uniform=getattr(model, "_uniform_pos", False))
+    o = attention_decode(q, kc, vc, pos, cfg, window=window)
+    a = out_project(p["attn"], o, x.dtype)
+    m, hstate, conv = ssm.mamba_decode_step(
+        p["mamba"], h, c["mamba"]["h"], c["mamba"]["conv"], cfg)
+    fused = 0.5 * (_rms(a.astype(F32)) + _rms(m.astype(F32)))
+    x = x + fused.astype(x.dtype)
+    h = apply_norm(p["mlp_norm"], x, cfg)
+    x = x + apply_mlp(p["mlp"], h, cfg)
+    return x, {"attn": {"k": kc, "v": vc},
+               "mamba": {"h": hstate, "conv": conv}}
+
+
+def _decode_windowed(model: Model, params, caches, x, q_pos, pos, layer_fn):
+    cfg = model.cfg
+    w = int(cfg.sliding_window)
+
+    def scan_stack(x, stack_p, stack_c, window):
+        def body(x, xs):
+            p, c = xs
+            return layer_fn(model, p, c, x, q_pos, pos, window)
+        return jax.lax.scan(body, x, (stack_p, stack_c))
+
+    if "flat" in params:
+        x, new = scan_stack(x, params["flat"], caches["flat"], w)
+        return x, {"flat": new}
+
+    def group(x, xs):
+        p, c = xs
+        x, new_loc = scan_stack(x, p["locals"], c["locals"], w)
+        x, new_glob = layer_fn(model, p["glob"], c["glob"], x, q_pos, pos, 0)
+        return x, {"locals": new_loc, "glob": new_glob}
+
+    x, new_groups = jax.lax.scan(group, x, (params["groups"],
+                                            caches["groups"]))
+    out = {"groups": new_groups}
+    if "tail" in params:
+        x, new_tail = scan_stack(x, params["tail"], caches["tail"], w)
+        out["tail"] = new_tail
+    return x, out
+
+
+def _decode_ssm(model: Model, params, caches, x):
+    cfg = model.cfg
+
+    def pair(x, xs):
+        p, c = xs
+        new = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            key = f"{i}_{kind}"
+            blk, st = p[key], c[key]
+            h = apply_norm(blk["norm"], x, cfg)
+            if kind == "mlstm":
+                h, new_st = ssm.mlstm_decode_step(blk["block"], h, st, cfg)
+            else:
+                h, new_st = ssm.slstm_decode_step(blk["block"], h, st, cfg)
+            x = x + h
+            new[key] = new_st
+        return x, new
+
+    return jax.lax.scan(pair, x, (params, caches))
+
+
+def _decode_vlm(model: Model, params, caches, x, q_pos, pos):
+    cfg = model.cfg
+
+    def group(x, xs):
+        p, c = xs
+
+        def body(x, ys):
+            lp, lc = ys
+            return _self_layer_decode(model, lp, lc, x, q_pos, pos,
+                                      int(cfg.sliding_window))
+
+        x, new_selfs = jax.lax.scan(body, x, (p["selfs"], c["selfs"]))
+        pc = p["cross"]
+        h = apply_norm(pc["attn_norm"], x, cfg)
+        q, _, _ = qkv_project(pc["attn"], h, h, cfg, rope=False)
+        o = attention_decode(q, c["cross_k"], c["cross_v"],
+                             jnp.asarray(c["cross_k"].shape[1] - 1), cfg)
+        h = out_project(pc["attn"], o, x.dtype)
+        x = x + jnp.tanh(pc["gate"].astype(F32)).astype(x.dtype) * h
+        h = apply_norm(pc["mlp_norm"], x, cfg)
+        x = x + apply_mlp(pc["mlp"], h, cfg)
+        return x, {"selfs": new_selfs, "cross_k": c["cross_k"],
+                   "cross_v": c["cross_v"]}
+
+    return jax.lax.scan(group, x, (params, caches))
+
+
+def _decode_audio(model: Model, params, caches, x, q_pos, pos, enc_len):
+    cfg = model.cfg
+
+    def layer(x, xs):
+        p, c = xs
+        h = apply_norm(p["attn_norm"], x, cfg)
+        q, k, v = qkv_project(p["attn"], h, h, cfg, q_positions=q_pos,
+                              k_positions=q_pos)
+        kc, vc = update_kv_cache(c["k"], c["v"], k, v, pos,
+                                 uniform=getattr(model, "_uniform_pos",
+                                                 False))
+        o = attention_decode(q, kc, vc, pos, cfg)
+        x = x + out_project(p["attn"], o, x.dtype)
+        h = apply_norm(p["cross_norm"], x, cfg)
+        q, _, _ = qkv_project(p["cross"], h, h, cfg, rope=False)
+        o = attention_decode(q, c["cross_k"], c["cross_v"], enc_len - 1, cfg)
+        x = x + out_project(p["cross"], o, x.dtype)
+        h = apply_norm(p["mlp_norm"], x, cfg)
+        x = x + apply_mlp(p["mlp"], h, cfg)
+        return x, {"k": kc, "v": vc, "cross_k": c["cross_k"],
+                   "cross_v": c["cross_v"]}
+
+    return jax.lax.scan(layer, x, (params, caches))
+
+
+# ---------------------------------------------------------------------------
+# Prefill -> state
+# ---------------------------------------------------------------------------
+
+def prefill(model: Model, params, batch: Dict[str, jax.Array],
+            max_len: int) -> Tuple[jax.Array, Dict]:
+    """Fill a decode state from a prompt; returns (last logits, state).
+
+    Implemented by streaming the prompt through ``decode_step`` under a
+    ``lax.scan`` -- exact for every family (attention caches and
+    recurrent states alike), one compiled program, and the decode-path
+    code is the single source of truth for cache layout.  Large-scale
+    deployments lower ``model.forward`` for the prefill phase (that is
+    what the prefill_32k dry-run cells measure); this streaming variant
+    is the serving engine's state builder.
+
+    For cross-attention families the static context (vision tokens /
+    encoder output) is projected once up front.
+    """
+    cfg = model.cfg
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    state = init_state(model, b, max_len)
+    state = _attach_cross_context(model, params, state, batch)
+
+    def step(state, tok):
+        logits, state = decode_step(model, params, state, tok[:, None])
+        return state, logits[:, 0]
+
+    state, logits = jax.lax.scan(step, state, tokens.T)
+    return logits[-1][:, None], state
+
+
+def _attach_cross_context(model: Model, params, state, batch):
+    """Project vision/encoder tokens into the cross-attention caches."""
+    cfg = model.cfg
+    if cfg.family == "vlm":
+        img = batch["images"]
+
+        def proj(p):
+            _, ck, cv = qkv_project(p["cross"]["attn"],
+                                    img.astype(jnp.bfloat16),
+                                    img.astype(jnp.bfloat16), cfg,
+                                    rope=False)
+            return ck, cv
+
+        ck, cv = jax.vmap(proj)(params["layers"])     # over groups
+        layers = dict(state["layers"])
+        cdt = layers["cross_k"].dtype
+        layers["cross_k"], layers["cross_v"] = (
+            ck.astype(cdt), cv.astype(cdt))
+        state = dict(state)
+        state["layers"] = layers
+    elif cfg.family == "audio":
+        enc = model._run_encoder(params, batch["frames"])
+        cache_len = state["layers"]["cross_k"].shape[2]
+        enc = enc[:, :cache_len]
+
+        def proj(p):
+            _, ck, cv = qkv_project(p["cross"], enc, enc, cfg, rope=False)
+            return ck, cv
+
+        ck, cv = jax.vmap(proj)(params["layers"])     # over decoder layers
+        layers = dict(state["layers"])
+        pad = cache_len - ck.shape[2]                 # left-align shorter enc
+        if pad:
+            padw = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+            ck = jnp.pad(ck, padw)
+            cv = jnp.pad(cv, padw)
+        cdt = layers["cross_k"].dtype
+        layers["cross_k"], layers["cross_v"] = (
+            ck.astype(cdt), cv.astype(cdt))
+        state = dict(state)
+        state["layers"] = layers
+        state["enc_len"] = jnp.asarray(enc.shape[1], jnp.int32)
+    return state

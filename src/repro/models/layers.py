@@ -1,0 +1,169 @@
+"""Common layers: norms, rotary embeddings, MLPs, token embedding/readout.
+
+Functional style throughout: ``<layer>_schema(cfg, axes)`` declares the
+parameters (see :mod:`repro.models.params`), ``<layer>(params, x, ...)``
+applies them.  All matmuls accumulate in float32 via
+``preferred_element_type`` so bf16 runs are numerically sane on the MXU.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from .params import Axes, ParamDef, Schema
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_schema(cfg: ArchConfig, name: str = "scale") -> Schema:
+    d = {name: ParamDef((cfg.d_model,), P(None), init="ones")}
+    if cfg.norm == "layernorm":
+        d["bias"] = ParamDef((cfg.d_model,), P(None), init="zeros")
+    return d
+
+
+def apply_norm(params: Schema, x: jax.Array, cfg: ArchConfig,
+               eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(F32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * params["scale"].astype(F32) + params["bias"].astype(F32)
+    else:  # rmsnorm
+        ms = (xf * xf).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * params["scale"].astype(F32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=F32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(F32) * freqs      # (..., S, hd/2)
+    angles = angles[..., None, :]                             # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def mlp_schema(cfg: ArchConfig, axes: Axes, d_ff: Optional[int] = None) -> Schema:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    tp = axes.tp if f % _size_hint(axes.tp) == 0 else None
+    sch: Schema = {
+        "wi": ParamDef((d, f), P(axes.fsdp, tp)),
+        "wo": ParamDef((f, d), P(tp, axes.fsdp)),
+    }
+    if cfg.mlp_gated:
+        sch["wg"] = ParamDef((d, f), P(axes.fsdp, tp))
+    return sch
+
+
+def _size_hint(axis) -> int:
+    # Divisibility is finally decided by the mesh at lowering time; the
+    # schema only needs "shardable at all".  16 is the production TP size.
+    return 16 if axis else 1
+
+
+def apply_mlp(params: Schema, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = jnp.einsum("...d,df->...f", x, params["wi"],
+                   preferred_element_type=F32)
+    if cfg.mlp_gated:
+        g = jnp.einsum("...d,df->...f", x, params["wg"],
+                       preferred_element_type=F32)
+        h = act(g) * h
+    else:
+        h = act(h)
+    out = jnp.einsum("...f,fd->...d", h.astype(x.dtype), params["wo"],
+                     preferred_element_type=F32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + logits readout
+# ---------------------------------------------------------------------------
+
+def embedding_schema(cfg: ArchConfig, axes: Axes) -> Schema:
+    v, d = cfg.padded_vocab, cfg.d_model
+    sch: Schema = {
+        "tokens": ParamDef((v, d), P(axes.tp, axes.fsdp), init="small"),
+    }
+    if not cfg.tie_embeddings:
+        sch["unembed"] = ParamDef((d, v), P(axes.fsdp, axes.tp))
+    return sch
+
+
+def embed_tokens(params: Schema, tokens: jax.Array, cfg: ArchConfig,
+                 dtype=jnp.bfloat16) -> jax.Array:
+    out = jnp.take(params["tokens"], tokens, axis=0)
+    if cfg.name.startswith("gemma"):
+        out = out * jnp.asarray(cfg.d_model ** 0.5, out.dtype)
+    return out.astype(dtype)
+
+
+def unembed(params: Schema, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["tokens"].T
+    else:
+        w = params["unembed"]
+    logits = jnp.einsum("...d,dv->...v", x, w, preferred_element_type=F32)
+    if cfg.attn_logit_softcap:   # gemma-style final softcap reuse
+        pass
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None,
+                  z_loss: float = 1e-4) -> jax.Array:
+    """Token-mean CE with an optional z-loss regularizer (MaxText-style).
+
+    Sharded-vocab safe: the gold logit is extracted with a one-hot
+    reduction (iota-compare, no gather) and logsumexp reduces over the
+    sharded vocab dim -- under GSPMD both become tiny (B,S) all-reduces.
+    A ``take_along_axis`` here would all-gather the full f32 logits
+    (measured: 33.6 GB/chip on llama3.2-1b train_4k) -- see
+    EXPERIMENTS.md §Perf.
+    """
+    logits = logits.astype(F32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    sumexp = jnp.exp(shifted).sum(-1)
+    lse = jnp.log(sumexp) + m[..., 0]
+    onehot = (labels[..., None] ==
+              jnp.arange(logits.shape[-1])[None, None]).astype(F32)
+    gold = (logits * onehot).sum(-1)
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * lse ** 2
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(F32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

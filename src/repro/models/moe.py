@@ -1,0 +1,141 @@
+"""Mixture-of-Experts: top-k router + grouped capacity (GShard) dispatch.
+
+Tokens are processed in contiguous *groups* (GShard's G x S layout).
+Dispatch/combine one-hots are materialized per group, so their size is
+O(S^2 * k * cf) per group instead of O(tokens * E * C) globally; with the
+default group of 1024 tokens the dispatch overhead is ~3% of expert
+FLOPs and the one-hot contractions lower to MXU matmuls.  The group dim
+is token-major, so it inherits the batch sharding over ``data`` and the
+expert-sharded einsums produce the canonical all-to-all pattern.
+
+FLOPs scale with ``capacity_factor * top_k``, not ``n_experts`` -- the
+compiled cost analysis therefore reflects *active* compute, which is
+what the MoE roofline rows must show.
+
+Expert padding (DESIGN.md §4): when ``n_experts`` is not divisible by
+the model-axis size (qwen2-moe: 60 % 16 != 0), experts are padded to the
+next multiple with dummies the router can never select (logits masked to
+-inf).  The padding count is surfaced in ``sharding_report``.
+
+Shared experts (qwen2-moe) run densely beside the routed path.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from .params import Axes, ParamDef, Schema
+
+F32 = jnp.float32
+
+EP_HINT = 16        # production model-axis size; pad experts to this
+GROUP_TOKENS = 1024
+
+
+def padded_experts(cfg: ArchConfig, hint: int = EP_HINT) -> int:
+    e = cfg.n_experts
+    if e % hint == 0 or e < hint:
+        return e
+    return -(-e // hint) * hint
+
+
+def moe_schema(cfg: ArchConfig, axes: Axes) -> Schema:
+    d, f = cfg.d_model, cfg.d_ff_expert
+    e_pad = padded_experts(cfg)
+    ep = axes.tp if (axes.tp and e_pad % EP_HINT == 0) else None
+    sch: Schema = {
+        "router": ParamDef((d, e_pad), P(axes.fsdp, None)),
+        "wi": ParamDef((e_pad, d, f), P(ep, axes.fsdp, None)),
+        "wg": ParamDef((e_pad, d, f), P(ep, axes.fsdp, None)),
+        "wo": ParamDef((e_pad, f, d), P(ep, None, axes.fsdp)),
+    }
+    if cfg.n_shared_experts:
+        sch["shared"] = {
+            "wi": ParamDef((d, cfg.n_shared_experts * f), P(axes.fsdp, axes.tp)),
+            "wg": ParamDef((d, cfg.n_shared_experts * f), P(axes.fsdp, axes.tp)),
+            "wo": ParamDef((cfg.n_shared_experts * f, d), P(axes.tp, axes.fsdp)),
+            "gate": ParamDef((d, 1), P(axes.fsdp, None), init="zeros"),
+        }
+    return sch
+
+
+def _group_size(n_tokens: int, want: int = GROUP_TOKENS) -> int:
+    g = min(want, n_tokens)
+    while n_tokens % g:
+        g -= 1
+    return g
+
+
+def moe_apply(params: Schema, x: jax.Array, cfg: ArchConfig,
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,D) -> (out (B,S,D), aux_loss scalar)."""
+    b, s, d = x.shape
+    e_pad = params["router"].shape[-1]
+    e_real = cfg.n_experts
+    k = cfg.experts_per_token
+    n = b * s
+    sg = _group_size(n)
+    g = n // sg
+    cap = max(int(cfg.capacity_factor * k * sg / e_pad), 4)
+    xt = x.reshape(g, sg, d)
+
+    logits = jnp.einsum("gsd,de->gse", xt, params["router"],
+                        preferred_element_type=F32)
+    if e_pad != e_real:                        # dummy experts unroutable
+        pad_mask = jnp.arange(e_pad) >= e_real
+        logits = jnp.where(pad_mask[None, None], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)            # (g,sg,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # per-group position of each (token, choice) in its expert's buffer
+    onehot = jax.nn.one_hot(expert_idx, e_pad, dtype=jnp.int32)  # (g,sg,k,e)
+    flat = onehot.reshape(g, sg * k, e_pad)
+    pos = (jnp.cumsum(flat, axis=1) - 1).reshape(g, sg, k, e_pad)
+    pos = (pos * onehot).sum(-1)                                # (g,sg,k)
+    keep = pos < cap
+
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1,
+                            dtype=x.dtype)[..., :cap]           # drop overflow
+    disp = jnp.einsum("gske,gskc->gsec", onehot.astype(x.dtype), pos_oh)
+    comb = jnp.einsum("gske,gskc,gsk->gsec", onehot.astype(F32),
+                      pos_oh.astype(F32), gate_vals)
+
+    xe = jnp.einsum("gsd,gsec->gecd", xt, disp)                 # (g,e,cap,d)
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = jnp.einsum("gecd,edf->gecf", xe, params["wi"],
+                   preferred_element_type=F32)
+    gt = jnp.einsum("gecd,edf->gecf", xe, params["wg"],
+                    preferred_element_type=F32)
+    h = (act(gt) * h).astype(x.dtype)
+    ye = jnp.einsum("gecf,efd->gecd", h, params["wo"],
+                    preferred_element_type=F32)                 # (g,e,cap,d)
+    out = jnp.einsum("gsec,gecd->gsd", comb, ye.astype(F32))
+
+    # load-balance auxiliary loss (Switch-style), real experts only
+    me = probs[..., :e_real].mean((0, 1))
+    ce = (onehot.sum(2)[..., :e_real] > 0).astype(F32).mean((0, 1))
+    aux = cfg.router_aux_coef * e_real * jnp.sum(me * ce)
+
+    out = out.astype(x.dtype).reshape(b, s, d)
+    if "shared" in params:
+        sh = params["shared"]
+        hs = jnp.einsum("bsd,df->bsf", x, sh["wi"],
+                        preferred_element_type=F32)
+        gs = jnp.einsum("bsd,df->bsf", x, sh["wg"],
+                        preferred_element_type=F32)
+        ys = jnp.einsum("bsf,fd->bsd", (act(gs) * hs).astype(x.dtype),
+                        sh["wo"], preferred_element_type=F32)
+        sgate = jax.nn.sigmoid(
+            jnp.einsum("bsd,dg->bsg", x, sh["gate"],
+                       preferred_element_type=F32))
+        out = out + (ys * sgate).astype(x.dtype)
+
+    return out, aux

@@ -1,0 +1,390 @@
+"""State-space / recurrent blocks: Mamba (S6), mLSTM, sLSTM.
+
+TPU adaptation (DESIGN.md §2): the CUDA selective-scan of the Mamba paper
+and the fused mLSTM kernels of xLSTM do not port; instead each recurrence
+is expressed in a *chunkwise-parallel* form that maps onto the MXU:
+
+* Mamba: ``lax.scan`` over sequence chunks; inside a chunk the diagonal
+  recurrence runs as an ``associative_scan`` (log-depth, parallel).
+* mLSTM: matrix-memory recurrence in the chunked linear-attention form --
+  intra-chunk quadratic term (a small attention with decay weights, MXU-
+  friendly) + inter-chunk state carry, with max-stabilized exponential
+  gating carried exactly.
+* sLSTM: memory mixing makes it sequential *by design* (the paper's own
+  point); it runs as a ``lax.scan`` over time and is deliberately kept in
+  the small minority of layers (xlstm-125m pattern).
+
+Sharding: Mamba shards ``d_inner`` over the model axis (channel-wise
+state independence makes this collective-free); mLSTM shards the value
+head dim; sLSTM is replicated over model (tiny, recurrence is dense in
+``hd``).  All shard only when divisible, per the §4 policy.
+
+Decode: every block exposes ``*_decode_step`` updating O(1)-per-token
+recurrent state -- this is what makes long_500k runnable for ssm/hybrid.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from .params import Axes, ParamDef, Schema
+
+F32 = jnp.float32
+
+
+def _tp_if(axes: Axes, dim: int, hint: int = 16):
+    return axes.tp if (axes.tp and dim % hint == 0) else None
+
+
+# ===========================================================================
+# Mamba (S6 selective scan)
+# ===========================================================================
+
+def mamba_schema(cfg: ArchConfig, axes: Axes) -> Schema:
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    tp = _tp_if(axes, inner)
+    return {
+        "in_proj": ParamDef((d, 2 * inner), P(axes.fsdp, tp)),
+        "conv_w": ParamDef((cfg.ssm_conv, inner), P(None, tp), init="fan_in",
+                           fan_in_axes=(0,)),
+        "conv_b": ParamDef((inner,), P(tp), init="zeros"),
+        "x_dbc": ParamDef((inner, 1 + 2 * n), P(tp, None)),   # -> dt, B, C
+        "dt_bias": ParamDef((inner,), P(tp), init="zeros"),
+        "a_log": ParamDef((inner, n), P(tp, None), init="ones"),
+        "d_skip": ParamDef((inner,), P(tp), init="ones"),
+        "out_proj": ParamDef((inner, d), P(tp, axes.fsdp)),
+    }
+
+
+def _mamba_gates(params: Schema, u: jax.Array, cfg: ArchConfig):
+    """Shared front half: projections, conv, dt/B/C. u: (B,S,D)."""
+    inner = params["conv_b"].shape[0]
+    xz = jnp.einsum("bsd,de->bse", u, params["in_proj"],
+                    preferred_element_type=F32)
+    x, z = jnp.split(xz, 2, axis=-1)                         # (B,S,inner)
+    # depthwise causal conv over seq
+    k = cfg.ssm_conv
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    x = sum(xp[:, i:i + x.shape[1]] * params["conv_w"][i].astype(F32)
+            for i in range(k)) + params["conv_b"].astype(F32)
+    x = jax.nn.silu(x)
+    dbc = jnp.einsum("bsi,ie->bse", x, params["x_dbc"].astype(F32))
+    n = cfg.ssm_state
+    # dt: scalar-per-token broadcast to channels through the learned bias
+    dt = jax.nn.softplus(dbc[..., 0:1] + params["dt_bias"].astype(F32))
+    bmat = dbc[..., 1:1 + n]                                  # (B,S,N)
+    cmat = dbc[..., 1 + n:]                                   # (B,S,N)
+    a = -jnp.exp(params["a_log"].astype(F32))                 # (inner,N)
+    return x, z, dt, bmat, cmat, a, inner
+
+
+def mamba_apply(params: Schema, u: jax.Array, cfg: ArchConfig,
+                chunk: int = 128) -> jax.Array:
+    """Full-sequence selective scan. u: (B,S,D) -> (B,S,D).
+
+    The C·h readout is fused INTO the chunk step so hidden states
+    (B, S, inner, N) -- 16x the activation size at N=16 -- exist only one
+    chunk at a time.  Before this fusion the full hidden stack dominated
+    hymba-1.5b train_4k HBM traffic (EXPERIMENTS.md §Perf cell A);
+    this is also how the Pallas ssm_scan kernel behaves (state stays in
+    VMEM, only y leaves).
+    """
+    x, z, dt, bmat, cmat, a, inner = _mamba_gates(params, u, cfg)
+    b_, s, _ = x.shape
+    n = cfg.ssm_state
+    # discretize: decay (B,S,inner,N), drive (B,S,inner,N)
+    decay = jnp.exp(dt[..., None] * a[None, None])            # exp(dt*A)
+    drive = (dt * x)[..., None] * bmat[:, :, None, :]         # dt*x*B
+
+    chunk = min(chunk, s)
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        decay = jnp.pad(decay, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                        constant_values=1.0)
+        drive = jnp.pad(drive, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    dec_c = decay.reshape(b_, nc, chunk, inner, n).transpose(1, 0, 2, 3, 4)
+    drv_c = drive.reshape(b_, nc, chunk, inner, n).transpose(1, 0, 2, 3, 4)
+    cm_c = cmat.reshape(b_, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    def chunk_step(h0, xs):
+        dec, drv, cm = xs                                     # (B,C,inner,N)
+        aa, bb = jax.lax.associative_scan(combine, (dec, drv), axis=1)
+        h = aa * h0[:, None] + bb                             # (B,C,inner,N)
+        y = jnp.einsum("bcin,bcn->bci", h, cm)                # fused C·h
+        return h[:, -1], y
+
+    h0 = jnp.zeros((b_, inner, n), F32)
+    _, ys = jax.lax.scan(chunk_step, h0, (dec_c, drv_c, cm_c))
+    y = ys.transpose(1, 0, 2, 3).reshape(b_, nc * chunk, inner)[:, :s]
+    y = y + x * params["d_skip"].astype(F32)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y.astype(u.dtype), params["out_proj"],
+                     preferred_element_type=F32)
+    return out.astype(u.dtype)
+
+
+def mamba_state_shape(cfg: ArchConfig, batch: int) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    inner = cfg.ssm_expand * cfg.d_model
+    return (batch, inner, cfg.ssm_state), (batch, cfg.ssm_conv - 1, inner)
+
+
+def mamba_decode_step(params: Schema, u: jax.Array, state: jax.Array,
+                      conv_state: jax.Array, cfg: ArchConfig):
+    """One token. u: (B,1,D); state: (B,inner,N); conv: (B,k-1,inner)."""
+    inner = params["conv_b"].shape[0]
+    n = cfg.ssm_state
+    xz = jnp.einsum("bsd,de->bse", u, params["in_proj"],
+                    preferred_element_type=F32)
+    x, z = jnp.split(xz, 2, axis=-1)                          # (B,1,inner)
+    window = jnp.concatenate([conv_state, x], axis=1)         # (B,k,inner)
+    conv_state = window[:, 1:]
+    x = jnp.einsum("bki,ki->bi", window, params["conv_w"].astype(F32)) \
+        + params["conv_b"].astype(F32)
+    x = jax.nn.silu(x)[:, None]                               # (B,1,inner)
+    dbc = jnp.einsum("bsi,ie->bse", x, params["x_dbc"].astype(F32))
+    dt = jax.nn.softplus(dbc[..., 0:1] + params["dt_bias"].astype(F32))
+    bmat, cmat = dbc[..., 1:1 + n], dbc[..., 1 + n:]
+    a = -jnp.exp(params["a_log"].astype(F32))
+    decay = jnp.exp(dt[:, 0, :, None] * a[None])              # (B,inner,N)
+    drive = (dt * x)[:, 0, :, None] * bmat[:, 0, None, :]
+    state = decay * state + drive
+    y = jnp.einsum("bin,bn->bi", state, cmat[:, 0])[:, None]
+    y = y + x * params["d_skip"].astype(F32)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y.astype(u.dtype), params["out_proj"],
+                     preferred_element_type=F32)
+    return out.astype(u.dtype), state, conv_state
+
+
+# ===========================================================================
+# mLSTM (matrix memory, chunkwise-parallel with stabilized gating)
+# ===========================================================================
+
+def mlstm_schema(cfg: ArchConfig, axes: Axes) -> Schema:
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    h = cfg.n_heads
+    hd = inner // h
+    tp = _tp_if(axes, hd)
+    return {
+        "up_proj": ParamDef((d, 2 * inner), P(axes.fsdp, None)),
+        "wq": ParamDef((inner, h, hd), P(None, None, None)),
+        "wk": ParamDef((inner, h, hd), P(None, None, None)),
+        "wv": ParamDef((inner, h, hd), P(None, None, tp)),
+        "w_if": ParamDef((inner, h, 2), P(None, None, None), init="small"),
+        "b_if": ParamDef((h, 2), P(None, None), init="zeros"),
+        "out_norm": ParamDef((inner,), P(None), init="ones"),
+        "down_proj": ParamDef((inner, d), P(None, axes.fsdp)),
+    }
+
+
+def _mlstm_qkvg(params: Schema, u: jax.Array):
+    xz = jnp.einsum("bsd,de->bse", u, params["up_proj"],
+                    preferred_element_type=F32)
+    x, z = jnp.split(xz, 2, axis=-1)                          # (B,S,inner)
+    q = jnp.einsum("bsi,ihk->bshk", x, params["wq"].astype(F32))
+    k = jnp.einsum("bsi,ihk->bshk", x, params["wk"].astype(F32))
+    v = jnp.einsum("bsi,ihk->bshk", x, params["wv"].astype(F32))
+    gates = jnp.einsum("bsi,ihg->bshg", x, params["w_if"].astype(F32)) \
+        + params["b_if"].astype(F32)
+    log_i = gates[..., 0]                                     # (B,S,H)
+    log_f = jax.nn.log_sigmoid(gates[..., 1])
+    return q, k, v, z, log_i, log_f
+
+
+def mlstm_apply(params: Schema, u: jax.Array, cfg: ArchConfig,
+                chunk: int = 128) -> jax.Array:
+    """Chunked mLSTM. u: (B,S,D) -> (B,S,D)."""
+    q, k, v, z, log_i, log_f = _mlstm_qkvg(params, u)
+    b_, s, h, hd = q.shape
+    hd_v = v.shape[-1]
+    scale = hd ** -0.5
+    chunk = min(chunk, s)
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        padfn = lambda t, fill=0.0: jnp.pad(
+            t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2),
+            constant_values=fill)
+        q, k, v = padfn(q), padfn(k), padfn(v)
+        log_i = padfn(log_i, -1e30)     # padded tokens contribute nothing
+        log_f = padfn(log_f, 0.0)
+
+    def to_chunks(t):
+        return t.reshape((b_, nc, chunk) + t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    lic, lfc = to_chunks(log_i), to_chunks(log_f)
+
+    causal = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None])
+
+    def chunk_step(carry, xs):
+        c_in, n_in, m_in = carry           # (B,H,hd,hdv), (B,H,hd), (B,H)
+        qj, kj, vj, li, lf = xs            # (B,C,H,*), (B,C,H)
+        fcum = jnp.cumsum(lf, axis=1)                          # F_t (B,C,H)
+        ftot = fcum[:, -1]                                     # (B,H)
+        # decay exponents: d[t,j] = F_t - F_j + log i_j  for j <= t
+        dmat = fcum[:, :, None] - fcum[:, None] + li[:, None]  # (B,t,j,H)
+        m_intra = jnp.max(dmat, axis=2, initial=-1e30,
+                          where=causal[None, :, :, None])      # (B,C,H)
+        m_inter = fcum + m_in[:, None]                         # (B,C,H)
+        m_t = jnp.maximum(m_intra, m_inter)
+        # inter-chunk: q_t . C_in, decayed through the chunk prefix
+        w_inter = jnp.exp(m_inter - m_t)                       # (B,C,H)
+        h_inter = jnp.einsum("bchk,bhkv->bchv", qj * scale, c_in) \
+            * w_inter[..., None]
+        n_inter = jnp.einsum("bchk,bhk->bch", qj * scale, n_in) * w_inter
+        # intra-chunk quadratic term with decay weights (MXU matmuls)
+        w_intra = jnp.exp(dmat - m_t[:, :, None]) * causal[None, :, :, None]
+        s_qk = jnp.einsum("bthk,bjhk->btjh", qj * scale, kj)
+        h_intra = jnp.einsum("btjh,btjh,bjhv->bthv", s_qk, w_intra, vj)
+        n_intra = jnp.einsum("btjh,btjh->bth", s_qk, w_intra)
+        h_num = h_inter + h_intra
+        n_den = jnp.maximum(jnp.abs(n_inter + n_intra), jnp.exp(-m_t))
+        h_out = h_num / n_den[..., None]
+        # state update to chunk end
+        m_out = jnp.maximum(ftot + m_in,
+                            jnp.max(ftot[:, None] - fcum + li, axis=1))
+        w_carry = jnp.exp(ftot + m_in - m_out)                 # (B,H)
+        w_k = jnp.exp(ftot[:, None] - fcum + li - m_out[:, None])  # (B,C,H)
+        c_out = c_in * w_carry[..., None, None] + jnp.einsum(
+            "bchk,bchv->bhkv", kj * w_k[..., None], vj)
+        n_out = n_in * w_carry[..., None] + jnp.einsum(
+            "bchk,bch->bhk", kj, w_k)
+        return (c_out, n_out, m_out), h_out
+
+    c0 = jnp.zeros((b_, h, hd, hd_v), F32)
+    n0 = jnp.zeros((b_, h, hd), F32)
+    m0 = jnp.full((b_, h), -1e30, F32)
+    _, hs = jax.lax.scan(chunk_step, (c0, n0, m0), (qc, kc, vc, lic, lfc))
+    hs = hs.swapaxes(0, 1).reshape(b_, nc * chunk, h, hd_v)[:, :s]
+    out = hs.reshape(b_, s, h * hd_v)
+    out = out * jax.nn.silu(z)
+    out = _rms(out) * params["out_norm"].astype(F32)
+    return jnp.einsum("bsi,id->bsd", out.astype(u.dtype),
+                      params["down_proj"],
+                      preferred_element_type=F32).astype(u.dtype)
+
+
+def _rms(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    return x * jax.lax.rsqrt((x * x).mean(-1, keepdims=True) + eps)
+
+
+def mlstm_state_shapes(cfg: ArchConfig, batch: int):
+    inner = cfg.ssm_expand * cfg.d_model
+    h = cfg.n_heads
+    hd = inner // h
+    return {"c": (batch, h, hd, hd), "n": (batch, h, hd), "m": (batch, h)}
+
+
+def mlstm_decode_step(params: Schema, u: jax.Array, state: Dict[str, jax.Array],
+                      cfg: ArchConfig):
+    """One token with O(1) state. u: (B,1,D)."""
+    q, k, v, z, log_i, log_f = _mlstm_qkvg(params, u)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                       # (B,H,hd)
+    li, lf = log_i[:, 0], log_f[:, 0]                         # (B,H)
+    scale = q.shape[-1] ** -0.5
+    c, n, m = state["c"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    fw = jnp.exp(lf + m - m_new)
+    iw = jnp.exp(li - m_new)
+    c = c * fw[..., None, None] + iw[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = n * fw[..., None] + iw[..., None] * k
+    h_num = jnp.einsum("bhk,bhkv->bhv", q * scale, c)
+    n_den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q * scale, n)),
+                        jnp.exp(-m_new))
+    h_out = (h_num / n_den[..., None]).reshape(u.shape[0], 1, -1)
+    out = h_out * jax.nn.silu(z)
+    out = _rms(out) * params["out_norm"].astype(F32)
+    out = jnp.einsum("bsi,id->bsd", out.astype(u.dtype), params["down_proj"],
+                     preferred_element_type=F32).astype(u.dtype)
+    return out, {"c": c, "n": n, "m": m_new}
+
+
+# ===========================================================================
+# sLSTM (scalar memory + memory mixing; sequential by design)
+# ===========================================================================
+
+def slstm_schema(cfg: ArchConfig, axes: Axes) -> Schema:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    return {
+        "w_gates": ParamDef((d, 4, h, hd), P(axes.fsdp, None, None, None)),
+        "r_gates": ParamDef((4, h, hd, hd), P(None, None, None, None),
+                            init="fan_in", fan_in_axes=(2,)),
+        "b_gates": ParamDef((4, h, hd), P(None, None, None), init="zeros"),
+        "out_norm": ParamDef((d,), P(None), init="ones"),
+        "out_proj": ParamDef((d, d), P(axes.fsdp, None)),
+    }
+
+
+def slstm_state_shapes(cfg: ArchConfig, batch: int):
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    return {k: (batch, h, hd) for k in ("c", "n", "h", "m")}
+
+
+def _slstm_cell(params: Schema, wx_t: jax.Array, state: Dict[str, jax.Array]):
+    """wx_t: (B,4,H,hd) precomputed input projections."""
+    r = params["r_gates"].astype(F32)
+    rec = jnp.einsum("bhk,ghkl->bghl", state["h"], r)          # (B,4,H,hd)
+    raw = wx_t + rec + params["b_gates"].astype(F32)
+    li = raw[:, 0]
+    lf = jax.nn.log_sigmoid(raw[:, 1])
+    zg = jnp.tanh(raw[:, 2])
+    og = jax.nn.sigmoid(raw[:, 3])
+    m_new = jnp.maximum(lf + state["m"], li)
+    fw = jnp.exp(lf + state["m"] - m_new)
+    iw = jnp.exp(li - m_new)
+    c = fw * state["c"] + iw * zg
+    n = fw * state["n"] + iw
+    h_new = og * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "h": h_new, "m": m_new}
+
+
+def slstm_apply(params: Schema, u: jax.Array, cfg: ArchConfig) -> jax.Array:
+    b_, s, d = u.shape
+    h, hd = cfg.n_heads, d // cfg.n_heads
+    wx = jnp.einsum("bsd,dghk->bsghk", u.astype(F32),
+                    params["w_gates"].astype(F32))
+    state = {k: jnp.zeros((b_, h, hd), F32) for k in ("c", "n", "h")}
+    state["m"] = jnp.full((b_, h, hd), -1e30, F32)
+
+    def step(state, wx_t):
+        new = _slstm_cell(params, wx_t, state)
+        return new, new["h"]
+
+    _, hs = jax.lax.scan(step, state, wx.swapaxes(0, 1))      # (S,B,H,hd)
+    hs = hs.swapaxes(0, 1).reshape(b_, s, d)
+    hs = _rms(hs) * params["out_norm"].astype(F32)
+    return jnp.einsum("bsd,de->bse", hs.astype(u.dtype), params["out_proj"],
+                      preferred_element_type=F32).astype(u.dtype)
+
+
+def slstm_decode_step(params: Schema, u: jax.Array,
+                      state: Dict[str, jax.Array], cfg: ArchConfig):
+    b_, _, d = u.shape
+    wx = jnp.einsum("bsd,dghk->bsghk", u.astype(F32),
+                    params["w_gates"].astype(F32))[:, 0]
+    new = _slstm_cell(params, wx, state)
+    hs = new["h"].reshape(b_, 1, d)
+    hs = _rms(hs) * params["out_norm"].astype(F32)
+    out = jnp.einsum("bsd,de->bse", hs.astype(u.dtype), params["out_proj"],
+                     preferred_element_type=F32).astype(u.dtype)
+    return out, new

@@ -1,0 +1,408 @@
+"""Model assembly: every assigned architecture family from one toolbox.
+
+A :class:`Model` is built from an :class:`~repro.configs.base.ArchConfig`
+and exposes:
+
+* ``schema()`` / ``init()`` / ``specs()``  -- parameters (one source of
+  truth for shapes, init, sharding; see models/params.py),
+* ``forward(params, batch)``               -- train/prefill logits + aux,
+* ``loss(params, batch)``                  -- CE + z-loss + MoE aux.
+
+Decode (KV-cache / recurrent-state serving) lives in models/decode.py.
+
+Families (DESIGN.md §5):
+
+dense / moe     -- one homogeneous decoder scan.
+gemma3-style    -- the 5:1 local:global window schedule is structural:
+                   scan over groups of (period-1 local layers + 1 global
+                   layer) + a local tail, so every window is a *static*
+                   Python int (no traced masks, no double compute) while
+                   params remain exactly the published stack.
+vlm             -- nested scan: groups of N self layers + 1 gated
+                   cross-attention layer (llama-3.2-vision structure).
+audio (enc-dec) -- whisper: bidirectional encoder over stub frame
+                   embeddings + decoder with per-layer cross-attn.
+ssm             -- xlstm: alternating mLSTM/sLSTM block pairs, scanned.
+hybrid          -- hymba: attention and Mamba in parallel per layer,
+                   fused by mean of RMS-normalized branch outputs; same
+                   grouped window schedule as gemma3.
+
+Remat: each scanned layer body is wrapped in ``jax.checkpoint`` with a
+configurable policy ("full" | "dots" | "none") -- the §Perf activation-
+memory knob.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from . import ssm
+from .attention import (attention_chunked, attention_dense, attention_schema,
+                        make_mask, out_project, qkv_project)
+from .layers import (apply_mlp, apply_norm, cross_entropy, embed_tokens,
+                     embedding_schema, mlp_schema, norm_schema, unembed)
+from .moe import moe_apply, moe_schema
+from .params import (Axes, ParamDef, Schema, init_params, param_shapes,
+                     param_specs, shard_act, stack_schema)
+
+F32 = jnp.float32
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)          # "full": save only layer boundaries
+
+
+@dataclass
+class Model:
+    cfg: ArchConfig
+    axes: Axes = field(default_factory=Axes)
+    remat: str = "full"
+    attn_impl: str = "auto"            # auto|dense|chunked
+    attn_chunk: int = 1024
+
+    # ------------------------------------------------------------------ #
+    # schema
+    # ------------------------------------------------------------------ #
+    def schema(self) -> Schema:
+        cfg = self.cfg
+        sch: Schema = {"embed": embedding_schema(cfg, self.axes),
+                       "final_norm": norm_schema(cfg)}
+        fam = cfg.family
+        layer = (self._hybrid_layer_schema() if fam == "hybrid"
+                 else self._self_layer_schema())
+        if fam in ("dense", "moe", "hybrid"):
+            sch["layers"] = self._windowed_stack_schema(layer)
+        elif fam == "vlm":
+            g = cfg.cross_attn_group
+            sch["layers"] = stack_schema(
+                {"selfs": stack_schema(layer, g),
+                 "cross": self._cross_layer_schema()},
+                cfg.n_layers // g)
+        elif fam == "audio":
+            sch["enc_layers"] = stack_schema(layer, cfg.n_encoder_layers)
+            sch["enc_norm"] = norm_schema(cfg)
+            sch["layers"] = stack_schema(
+                self._decoder_cross_layer_schema(), cfg.n_layers)
+        elif fam == "ssm":
+            pair: Schema = {}
+            for i, kind in enumerate(cfg.block_pattern):
+                blk = (ssm.mlstm_schema(cfg, self.axes) if kind == "mlstm"
+                       else ssm.slstm_schema(cfg, self.axes))
+                pair[f"{i}_{kind}"] = {"norm": norm_schema(cfg), "block": blk}
+            sch["layers"] = stack_schema(
+                pair, cfg.n_layers // len(cfg.block_pattern))
+        else:
+            raise ValueError(f"unknown family {fam}")
+        return sch
+
+    def _windowed_stack_schema(self, layer: Schema) -> Schema:
+        cfg = self.cfg
+        period = cfg.global_every
+        if not (cfg.sliding_window and period) or cfg.n_layers < period:
+            return {"flat": stack_schema(layer, cfg.n_layers)}
+        n_groups, n_tail = divmod(cfg.n_layers, period)
+        sch: Schema = {"groups": stack_schema(
+            {"locals": stack_schema(layer, period - 1), "glob": layer},
+            n_groups)}
+        if n_tail:
+            sch["tail"] = stack_schema(layer, n_tail)
+        return sch
+
+    def _self_layer_schema(self) -> Schema:
+        cfg, axes = self.cfg, self.axes
+        sch: Schema = {
+            "attn_norm": norm_schema(cfg),
+            "attn": attention_schema(cfg, axes),
+            "mlp_norm": norm_schema(cfg),
+        }
+        if cfg.is_moe:
+            sch["moe"] = moe_schema(cfg, axes)
+        else:
+            sch["mlp"] = mlp_schema(cfg, axes)
+        return sch
+
+    def _cross_layer_schema(self) -> Schema:
+        cfg, axes = self.cfg, self.axes
+        return {
+            "attn_norm": norm_schema(cfg),
+            "attn": attention_schema(cfg, axes, cross=True),
+            "mlp_norm": norm_schema(cfg),
+            "mlp": mlp_schema(cfg, axes),
+            "gate": ParamDef((1,), P(None), init="zeros"),
+        }
+
+    def _decoder_cross_layer_schema(self) -> Schema:
+        sch = self._self_layer_schema()
+        sch["cross_norm"] = norm_schema(self.cfg)
+        sch["cross"] = attention_schema(self.cfg, self.axes, cross=True)
+        return sch
+
+    def _hybrid_layer_schema(self) -> Schema:
+        cfg, axes = self.cfg, self.axes
+        return {
+            "norm": norm_schema(cfg),
+            "attn": attention_schema(cfg, axes),
+            "mamba": ssm.mamba_schema(cfg, axes),
+            "mlp_norm": norm_schema(cfg),
+            "mlp": mlp_schema(cfg, axes),
+        }
+
+    def init(self, key: jax.Array, dtype=jnp.float32):
+        return init_params(self.schema(), key, dtype)
+
+    def specs(self):
+        return param_specs(self.schema())
+
+    def shapes(self, dtype=jnp.bfloat16):
+        return param_shapes(self.schema(), dtype)
+
+    # ------------------------------------------------------------------ #
+    # forward (train / prefill)
+    # ------------------------------------------------------------------ #
+    def forward(self, params, batch: Dict[str, jax.Array]
+                ) -> Tuple[jax.Array, jax.Array]:
+        """-> (logits (B,S,V), aux_loss scalar)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = embed_tokens(params["embed"], tokens, cfg,
+                         dtype=self._adtype(params))
+        x = self._cact(x)
+        pos = jnp.arange(tokens.shape[1])
+        aux0 = jnp.zeros((), F32)
+        fam = cfg.family
+
+        if fam in ("dense", "moe"):
+            x, aux = self._run_windowed(params["layers"], x, aux0, pos,
+                                        self._self_layer)
+        elif fam == "hybrid":
+            x, aux = self._run_windowed(params["layers"], x, aux0, pos,
+                                        self._hybrid_layer)
+        elif fam == "vlm":
+            x, aux = self._run_vlm(params["layers"], x, aux0, pos,
+                                   batch["images"])
+        elif fam == "audio":
+            enc = self._run_encoder(params, batch["frames"])
+            x, aux = self._run_audio_decoder(params["layers"], x, aux0,
+                                             pos, enc)
+        elif fam == "ssm":
+            x = self._run_ssm_stack(params["layers"], x)
+            aux = aux0
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = unembed(params["embed"], x, cfg)
+        if logits.shape[0] > 1:
+            logits = shard_act(
+                logits, self.axes.batch_spec(None, self.axes.tp))
+        return logits, aux
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        logits, aux = self.forward(params, batch)
+        labels = batch.get("labels", batch["tokens"])
+        ce = cross_entropy(logits[:, :-1], labels[:, 1:])
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    # ---- attention plumbing ---------------------------------------------------
+    def _adtype(self, params):
+        return jax.tree.leaves(params["embed"])[0].dtype
+
+    def _cact(self, x):
+        """Pin activations to batch sharding (see params.shard_act).
+
+        Decode exception (``_replicate_acts``): one-token activations are
+        tiny (batch x d_model), while FSDP weight all-gathers cost
+        ~params/TP per step (mistral decode_32k: 29.7 GB/chip/step).
+        Replicating the activations flips the resolution: weights stay
+        fully 256-way sharded and each matmul psums a few hundred KB --
+        the weight-stationary serving layout (EXPERIMENTS.md §Perf C2).
+        """
+        if getattr(self, "_replicate_acts", False):
+            return shard_act(x, P(*([None] * x.ndim)))
+        if x.shape[0] == 1:
+            return x
+        if getattr(self, "seq_parallel", False) and x.ndim == 3:
+            # sequence parallelism (Megatron SP): activations in the
+            # norm/residual regions shard their SEQ dim over ``model``,
+            # so the per-layer TP combine lowers to reduce-scatter (+
+            # all-gather at the next attention/MLP entry) -- half the
+            # bytes of the plain all-reduce (§Perf B2).
+            return shard_act(x, self.axes.batch_spec(self.axes.tp, None))
+        return shard_act(x, self.axes.batch_spec(
+            *([None] * (x.ndim - 1))))
+
+    def _attend(self, p, x, q_pos, k_pos, window: int, *, causal=True,
+                xkv=None, rope=True):
+        cfg = self.cfg
+        q, k, v = qkv_project(p, x, x if xkv is None else xkv, cfg,
+                              q_positions=q_pos, k_positions=k_pos,
+                              rope=rope)
+        sq, skv = q.shape[1], k.shape[1]
+        impl = self.attn_impl
+        if impl == "auto":
+            impl = "dense" if sq * skv <= 2048 * 2048 else "chunked"
+        if impl == "dense":
+            mask = (make_mask(q_pos, k_pos, causal=causal, window=window)
+                    if (causal or window) else None)
+            o = attention_dense(q, k, v, mask, cfg)
+        else:
+            o = attention_chunked(q, k, v, q_pos, k_pos, cfg, causal=causal,
+                                  window=window, chunk=self.attn_chunk)
+        return out_project(p, o, x.dtype)
+
+    # ---- layer bodies -----------------------------------------------------------
+    def _gather_sp(self, h):
+        """Megatron-SP all-gather point: TP-region inputs need the full
+        sequence; residual stays seq-sharded so the TP output combine
+        lowers to reduce-scatter instead of all-reduce."""
+        if getattr(self, "seq_parallel", False) and h.shape[0] > 1 \
+                and h.ndim == 3:
+            return shard_act(h, self.axes.batch_spec(None, None))
+        return h
+
+    def _self_layer(self, p, x, aux, pos, window: int):
+        cfg = self.cfg
+        x = self._cact(x)
+        h = self._gather_sp(apply_norm(p["attn_norm"], x, cfg))
+        x = x + self._attend(p["attn"], h, pos, pos, window)
+        h = self._gather_sp(apply_norm(p["mlp_norm"], x, cfg))
+        if cfg.is_moe:
+            h, a = moe_apply(p["moe"], h, cfg)
+            aux = aux + a
+        else:
+            h = apply_mlp(p["mlp"], h, cfg)
+        return x + h, aux
+
+    def _hybrid_layer(self, p, x, aux, pos, window: int):
+        cfg = self.cfg
+        x = self._cact(x)
+        h = apply_norm(p["norm"], x, cfg)
+        a = self._attend(p["attn"], h, pos, pos, window)
+        m = ssm.mamba_apply(p["mamba"], h, cfg)
+        fused = 0.5 * (_rms(a.astype(F32)) + _rms(m.astype(F32)))
+        x = x + fused.astype(x.dtype)
+        h = apply_norm(p["mlp_norm"], x, cfg)
+        return x + apply_mlp(p["mlp"], h, cfg), aux
+
+    # ---- stacks ----------------------------------------------------------------
+    def _scan_layers(self, layer_fn, stacked, x, aux, pos, window: int):
+        def body(carry, p):
+            x, aux = carry
+            return layer_fn(p, x, aux, pos, window), None
+
+        (x, aux), _ = jax.lax.scan(_remat(body, self.remat), (x, aux),
+                                   stacked)
+        return x, aux
+
+    def _run_windowed(self, params, x, aux, pos, layer_fn):
+        cfg = self.cfg
+        w = int(cfg.sliding_window)
+        if "flat" in params:
+            x, aux = self._scan_layers(layer_fn, params["flat"], x, aux,
+                                       pos, w)
+        else:
+            def group(carry, p):
+                x, aux = carry
+                x, aux = self._scan_layers(layer_fn, p["locals"], x, aux,
+                                           pos, w)
+                x, aux = layer_fn(p["glob"], x, aux, pos, 0)
+                return (x, aux), None
+
+            (x, aux), _ = jax.lax.scan(_remat(group, self.remat), (x, aux),
+                                       params["groups"])
+            if "tail" in params:
+                x, aux = self._scan_layers(layer_fn, params["tail"], x, aux,
+                                           pos, w)
+        if cfg.is_moe:
+            aux = aux / max(cfg.n_layers, 1)
+        return x, aux
+
+    def _run_vlm(self, params, x, aux, pos, images):
+        cfg = self.cfg
+        img = images.astype(x.dtype)
+        img_pos = jnp.arange(img.shape[1])
+
+        def group(carry, p):
+            x, aux = carry
+            x = self._cact(x)
+            x, aux = self._scan_layers(self._self_layer, p["selfs"], x, aux,
+                                       pos, int(cfg.sliding_window))
+            pc = p["cross"]
+            h = apply_norm(pc["attn_norm"], x, cfg)
+            h = self._attend(pc["attn"], h, pos, img_pos, 0, causal=False,
+                             xkv=img, rope=False)
+            x = x + jnp.tanh(pc["gate"].astype(F32)).astype(x.dtype) * h
+            h = apply_norm(pc["mlp_norm"], x, cfg)
+            x = x + apply_mlp(pc["mlp"], h, cfg)
+            return (x, aux), None
+
+        (x, aux), _ = jax.lax.scan(_remat(group, self.remat), (x, aux),
+                                   params)
+        return x, aux
+
+    def _run_encoder(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(self._adtype(params))
+        pos = jnp.arange(x.shape[1])
+
+        def layer(carry, p):
+            x, aux = carry
+            x = self._cact(x)
+            h = apply_norm(p["attn_norm"], x, cfg)
+            x = x + self._attend(p["attn"], h, pos, pos, 0, causal=False)
+            h = apply_norm(p["mlp_norm"], x, cfg)
+            return (x + apply_mlp(p["mlp"], h, cfg), aux), None
+
+        (x, _), _ = jax.lax.scan(_remat(layer, self.remat),
+                                 (x, jnp.zeros((), F32)),
+                                 params["enc_layers"])
+        return apply_norm(params["enc_norm"], x, cfg)
+
+    def _run_audio_decoder(self, params, x, aux, pos, enc):
+        cfg = self.cfg
+        enc_pos = jnp.arange(enc.shape[1])
+
+        def layer(carry, p):
+            x, aux = carry
+            x = self._cact(x)
+            h = apply_norm(p["attn_norm"], x, cfg)
+            x = x + self._attend(p["attn"], h, pos, pos, 0)
+            h = apply_norm(p["cross_norm"], x, cfg)
+            x = x + self._attend(p["cross"], h, pos, enc_pos, 0,
+                                 causal=False, xkv=enc, rope=False)
+            h = apply_norm(p["mlp_norm"], x, cfg)
+            return (x + apply_mlp(p["mlp"], h, cfg), aux), None
+
+        (x, aux), _ = jax.lax.scan(_remat(layer, self.remat), (x, aux),
+                                   params)
+        return x, aux
+
+    def _run_ssm_stack(self, stacked, x):
+        cfg = self.cfg
+
+        def pair(carry, p):
+            x = self._cact(carry)
+            for i, kind in enumerate(cfg.block_pattern):
+                blk = p[f"{i}_{kind}"]
+                h = apply_norm(blk["norm"], x, cfg)
+                if kind == "mlstm":
+                    h = ssm.mlstm_apply(blk["block"], h, cfg)
+                else:
+                    h = ssm.slstm_apply(blk["block"], h, cfg)
+                x = x + h
+            return x, None
+
+        x, _ = jax.lax.scan(_remat(pair, self.remat), x, stacked)
+        return x
+
+
+def _rms(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    return x * jax.lax.rsqrt((x * x).mean(-1, keepdims=True) + eps)

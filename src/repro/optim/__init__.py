@@ -1,0 +1,11 @@
+"""Optimizer substrate: AdamW, schedules, clipping, compression."""
+
+from .adamw import AdamWState, adamw_init, adamw_update, opt_state_specs
+from .compress import (CompressionState, compress_decompress,
+                       compression_init, int8_quantize, int8_dequantize)
+from .schedules import constant, linear_warmup_cosine
+
+__all__ = ["AdamWState", "CompressionState", "adamw_init", "adamw_update",
+           "compress_decompress", "compression_init", "constant",
+           "int8_dequantize", "int8_quantize", "linear_warmup_cosine",
+           "opt_state_specs"]

@@ -1,0 +1,64 @@
+"""AdamW with decoupled weight decay, f32 moments over bf16 params.
+
+Functional: ``adamw_init(params) -> state``, ``adamw_update(grads,
+state, params, lr, ...) -> (new_params, new_state)``.  Moments inherit
+the parameter PartitionSpecs (``opt_state_specs``), so FSDP shards
+optimizer state exactly like parameters -- the ZeRO-3 layout.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: object          # first moment pytree (f32)
+    nu: object          # second moment pytree (f32)
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay and p.ndim >= 2:       # no decay on norms/biases
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu)
+
+
+def opt_state_specs(param_spec_tree) -> AdamWState:
+    """Moments shard exactly like their parameters (ZeRO-3)."""
+    from jax.sharding import PartitionSpec as P
+    return AdamWState(step=P(), mu=param_spec_tree, nu=param_spec_tree)

@@ -1,0 +1,62 @@
+"""Int8 error-feedback gradient compression for slow inter-pod links.
+
+Cross-pod gradient all-reduce is the dominant multi-pod collective
+(§Roofline); quantizing the cross-pod leg to int8 cuts its bytes 4x
+(vs f32 accumulators; 2x vs bf16).  Error feedback keeps the scheme
+unbiased over time: the quantization residual is carried and added to
+the next step's gradient, so SGD-style convergence guarantees hold
+(Seide et al.; Karimireddy et al.).
+
+``compress_decompress`` is the numerical core (quantize -> [transport]
+-> dequantize, residual out).  In the trainer it wraps the gradient
+*before* the pod-axis psum inside shard_map (launch/train.py); here it
+is transport-agnostic so tests can assert the error-feedback invariant
+exactly.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    residual: object        # pytree of f32 residuals, zeros at init
+
+
+def compression_init(params) -> CompressionState:
+    return CompressionState(
+        residual=jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def int8_quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads, state: CompressionState
+                        ) -> Tuple[object, CompressionState]:
+    """Quantize (grad + residual) to int8, return dequantized grads and
+    the new residuals.  The int8 payload is what crosses the pod link."""
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        q, scale = int8_quantize(g)
+        deq = int8_dequantize(q, scale)
+        return deq, g - deq
+
+    out = jax.tree.map(one, grads, state.residual)
+    deq = jax.tree.map(lambda o: o[0], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda o: o[1], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return deq, CompressionState(residual=res)

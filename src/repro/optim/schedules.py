@@ -1,0 +1,22 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup_cosine(step, *, peak_lr: float, warmup_steps: int,
+                         total_steps: int, final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    # (step+1): the first step must train, not idle at lr=0
+    warm = peak_lr * (step + 1) / jnp.maximum(warmup_steps, 1)
+    progress = (step - warmup_steps) / jnp.maximum(
+        total_steps - warmup_steps, 1)
+    progress = jnp.clip(progress, 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * progress))
+    return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+
+def constant(step, *, peak_lr: float, **_):
+    return jnp.full_like(jnp.asarray(step, jnp.float32), peak_lr)

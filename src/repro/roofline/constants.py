@@ -1,0 +1,12 @@
+"""TPU v5e-like hardware constants (per chip)."""
+
+PEAK_FLOPS = 197e12       # bf16 FLOP/s
+HBM_BW = 819e9            # bytes/s
+ICI_BW = 50e9             # bytes/s per link (task-specified)
+
+CHIP = {
+    "peak_flops": PEAK_FLOPS,
+    "hbm_bw": HBM_BW,
+    "ici_bw": ICI_BW,
+    "hbm_bytes": 16 * 2**30,
+}

@@ -1,0 +1,74 @@
+"""Collective-byte accounting from post-SPMD compiled HLO text.
+
+``compiled.as_text()`` (after partitioning/optimization) names every
+collective explicitly; we sum the *operand* bytes of each -- the payload
+a chip must move -- bucketed by op kind.  ``lowered.as_text()`` is
+pre-SPMD (sharding annotations, no collectives), so the compiled module
+is the right artifact.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z]*\d*(?:e\dm\d\w*)?)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"=\s*(?:\([^)]*\)\s*)?"                      # optional tuple result
+    r"((?:bf16|f16|f32|f64|s\d+|u\d+|pred|c\d+|f8\w+)\[[^=]*?)?"
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(", )
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, object]:
+    """Sum operand bytes per collective kind from compiled HLO text."""
+    per_kind: Dict[str, float] = defaultdict(float)
+    per_kind_count: Dict[str, int] = defaultdict(int)
+    ops: List[Tuple[str, float]] = []
+    for line in hlo_text.splitlines():
+        m = None
+        for kind in COLLECTIVE_OPS:
+            token = f" {kind}(" if f" {kind}(" in line else (
+                f"{kind}-start(" if f"{kind}-start(" in line else None)
+            if token is not None and "=" in line:
+                m = kind
+                break
+        if m is None:
+            continue
+        # operand shapes are inside the call parens; result shape(s)
+        # precede the op name.  Take shapes after the op token.
+        idx = line.index(m)
+        operands = line[idx:]
+        shapes = _SHAPE_RE.findall(operands)
+        nbytes = float(sum(_shape_bytes(dt, dims) for dt, dims in shapes))
+        if nbytes == 0:
+            continue
+        per_kind[m] += nbytes
+        per_kind_count[m] += 1
+        ops.append((m, nbytes))
+    return {
+        "total_bytes": float(sum(per_kind.values())),
+        "per_kind_bytes": dict(per_kind),
+        "per_kind_count": dict(per_kind_count),
+        "n_ops": len(ops),
+        "largest": sorted(ops, key=lambda t: -t[1])[:10],
+    }

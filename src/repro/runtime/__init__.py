@@ -1,0 +1,8 @@
+"""Distributed runtime: failure detection, stragglers, elastic re-mesh."""
+
+from .elastic import ElasticMeshPlanner, MeshPlan
+from .fault import HeartbeatMonitor, WorkerState
+from .straggler import StragglerDetector
+
+__all__ = ["ElasticMeshPlanner", "HeartbeatMonitor", "MeshPlan",
+           "StragglerDetector", "WorkerState"]

@@ -1,0 +1,5 @@
+"""Serving substrate: continuous batching over a DynIMS-managed KV pool."""
+
+from .engine import Request, ServingEngine, ServingConfig
+
+__all__ = ["Request", "ServingConfig", "ServingEngine"]

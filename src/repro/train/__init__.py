@@ -1,0 +1,7 @@
+"""Training substrate: step builder + fault-tolerant trainer loop."""
+
+from .step import TrainStepConfig, build_train_step
+from .trainer import Trainer, TrainerConfig
+
+__all__ = ["TrainStepConfig", "Trainer", "TrainerConfig",
+           "build_train_step"]

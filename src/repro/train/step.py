@@ -1,0 +1,121 @@
+"""Train-step builder: CE + z-loss, microbatched grad accumulation,
+global-norm clipping, AdamW, optional int8 error-feedback compression.
+
+The returned function is pure and jit/pjit-friendly:
+
+    step_fn(params, opt_state, batch) -> (params, opt_state, metrics)
+
+Microbatching: the global batch is split into ``microbatches`` equal
+slices scanned sequentially with f32 gradient accumulation -- the
+activation-memory knob that makes mistral-large-123b train_4k fit
+(DESIGN.md §4 / EXPERIMENTS.md §Perf).
+
+Compression: with ``compress=True`` the optimizer consumes int8-
+quantized gradients with error feedback; the residual rides in
+``opt_state``.  On the multi-pod mesh the quantized payload is what the
+pod-axis reduction moves (launch/train.py wires the shard_map variant).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import Model
+from ..optim.adamw import AdamWState, adamw_init, adamw_update
+from ..optim.compress import (CompressionState, compress_decompress,
+                              compression_init)
+from ..optim.schedules import linear_warmup_cosine
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class TrainStepConfig:
+    microbatches: int = 1
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    clip_norm: float = 1.0
+    compress: bool = False
+    schedule: Callable = linear_warmup_cosine
+
+
+class TrainState(NamedTuple):
+    adam: AdamWState
+    compression: Optional[CompressionState]
+
+
+def init_train_state(params, cfg: TrainStepConfig) -> TrainState:
+    return TrainState(
+        adam=adamw_init(params),
+        compression=compression_init(params) if cfg.compress else None,
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(F32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(F32) * scale), tree), norm
+
+
+def build_train_step(model: Model, cfg: TrainStepConfig):
+    """-> step_fn(params, state, batch) for pjit."""
+
+    def loss_fn(params, micro):
+        loss, parts = model.loss(params, micro)
+        return loss, parts
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def accumulate(params, batch):
+        n = cfg.microbatches
+        if n == 1:
+            (loss, parts), grads = grad_fn(params, batch)
+            return grads, loss, parts
+        split = jax.tree.map(
+            lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+        def micro_step(acc, mb):
+            g_acc, l_acc = acc
+            (loss, _), grads = grad_fn(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(F32) / n, g_acc, grads)
+            return (g_acc, l_acc + loss / n), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+        (grads, loss), _ = jax.lax.scan(
+            micro_step, (zeros, jnp.zeros((), F32)), split)
+        return grads, loss, {"ce": loss, "aux": jnp.zeros((), F32)}
+
+    def step_fn(params, state: TrainState, batch
+                ) -> Tuple[object, TrainState, Dict[str, jax.Array]]:
+        grads, loss, parts = accumulate(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        comp = state.compression
+        if cfg.compress:
+            grads, comp = compress_decompress(grads, comp)
+        lr = cfg.schedule(state.adam.step, peak_lr=cfg.peak_lr,
+                          warmup_steps=cfg.warmup_steps,
+                          total_steps=cfg.total_steps)
+        params, adam = adamw_update(
+            grads, state.adam, params, lr=lr, b1=cfg.b1, b2=cfg.b2,
+            weight_decay=cfg.weight_decay)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
+                   "step": adam.step, **parts}
+        return params, TrainState(adam=adam, compression=comp), metrics
+
+    return step_fn

@@ -1,0 +1,116 @@
+"""Fault-tolerant trainer: step loop + DynIMS + checkpoint/restart.
+
+One object wires the whole stack the way a pod deployment would:
+
+* data: :class:`~repro.data.pipeline.DataPipeline` whose host shard
+  cache is DynIMS-managed (the paper's contribution in the input path),
+* control: one :class:`~repro.core.controller.ControlPlane` ticked from
+  the step loop (production runs it on its own thread at T=100 ms; the
+  step-synchronous tick keeps tests deterministic),
+* checkpointing: :class:`~repro.checkpoint.CheckpointManager`, restart
+  via ``resume()`` -- the pipeline is sampled by step number, so restore
+  is exact,
+* runtime: heartbeats + straggler detection with the DynIMS squeeze
+  escalation (runtime/straggler.py).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from ..configs.dynims import host_cache_params
+from ..core.controller import ControlPlane
+from ..data.pipeline import DataPipeline
+from ..models.transformer import Model
+from ..runtime.fault import HeartbeatMonitor
+from ..runtime.straggler import StragglerDetector
+from .step import TrainStepConfig, TrainState, build_train_step, \
+    init_train_state
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro-ckpt"
+    async_checkpoint: bool = False
+    log_every: int = 10
+    dynims_interval_steps: int = 1      # control ticks per step
+
+
+class Trainer:
+    def __init__(self, model: Model, pipeline: DataPipeline,
+                 step_cfg: TrainStepConfig, cfg: TrainerConfig,
+                 plane: Optional[ControlPlane] = None,
+                 jit: bool = True):
+        self.model = model
+        self.pipeline = pipeline
+        self.cfg = cfg
+        self.step_cfg = step_cfg
+        self.plane = plane
+        self.ckpt = CheckpointManager(cfg.checkpoint_dir,
+                                      async_save=cfg.async_checkpoint)
+        self.heartbeats = HeartbeatMonitor()
+        self.stragglers = StragglerDetector(
+            squeeze_cb=self._squeeze_worker)
+        step_fn = build_train_step(model, step_cfg)
+        self._step_fn = jax.jit(step_fn) if jit else step_fn
+        self.metrics_log: List[Dict[str, float]] = []
+        self._squeezed: Dict[str, float] = {}
+
+    # ---- DynIMS coupling ---------------------------------------------------
+    def _squeeze_worker(self, worker: str, factor: float) -> None:
+        """Straggler mitigation step 1: shrink that worker's cache."""
+        self._squeezed[worker] = factor
+        if self.plane is not None:
+            node = self.plane.controller._nodes.get(worker)
+            if node is not None:
+                node.registry.apply_capacity(node.u * factor)
+
+    # ---- main loop ------------------------------------------------------------
+    def fit(self, params, state: Optional[TrainState] = None,
+            start_step: int = 0):
+        state = state or init_train_state(params, self.step_cfg)
+        worker = "worker-0"
+        self.heartbeats.register(worker)
+        for step in range(start_step, self.cfg.steps):
+            t0 = time.monotonic()
+            batch = self.pipeline.batch(step)
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            params, state, metrics = self._step_fn(params, state, batch)
+            if self.plane is not None and (
+                    step % self.cfg.dynims_interval_steps == 0):
+                self.plane.tick()
+            dt = time.monotonic() - t0
+            self.heartbeats.heartbeat(worker)
+            self.stragglers.record(worker, dt)
+            if step % self.cfg.log_every == 0 or step == self.cfg.steps - 1:
+                row = {k: float(np.asarray(v)) for k, v in metrics.items()}
+                row.update(step=step, wall_s=dt,
+                           cache_hit=self.pipeline.hit_ratio)
+                self.metrics_log.append(row)
+            if (step + 1) % self.cfg.checkpoint_every == 0 \
+                    or step == self.cfg.steps - 1:
+                self.ckpt.save({"params": params, "opt": state.adam,
+                                "step": step + 1}, step + 1)
+        self.ckpt.wait()
+        return params, state
+
+    # ---- restart --------------------------------------------------------------
+    def resume(self, params, state: Optional[TrainState] = None):
+        """Restore the newest complete checkpoint and continue."""
+        state = state or init_train_state(params, self.step_cfg)
+        tree_like = {"params": params, "opt": state.adam, "step": 0}
+        restored, step = self.ckpt.restore_latest(tree_like)
+        if restored is None:
+            return self.fit(params, state, start_step=0)
+        params = restored["params"]
+        state = TrainState(adam=restored["opt"],
+                           compression=state.compression)
+        return self.fit(params, state, start_step=int(restored["step"]))

@@ -1,0 +1,138 @@
+"""Control-law unit + property tests (paper Eq. 1, Table I)."""
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (ControllerParams, GiB, closed_loop_eigenvalue,
+                        control_step, fixed_point_capacity, is_stable,
+                        settling_time, simulate_saturated_loop,
+                        vectorized_step)
+from repro.core.cluster_sim import paper_controller_params
+
+
+def test_table_one_parameters():
+    p = paper_controller_params()
+    assert p.total_memory == 125 * GiB
+    assert p.r0 == 0.95 and p.lam == 0.5
+    assert p.u_min == 0 and p.u_max == 60 * GiB
+    assert p.interval_s == 0.1
+    assert p.is_paper_faithful
+
+
+def test_eq1_matches_paper_formula():
+    p = paper_controller_params()
+    u, v = 40 * GiB, 120 * GiB
+    r = v / p.total_memory
+    expected = u - p.lam * v * (r - p.r0) / p.r0
+    assert control_step(u, v, p) == pytest.approx(expected, rel=1e-12)
+
+
+def test_clamping():
+    p = paper_controller_params()
+    assert control_step(59 * GiB, 40 * GiB, p) == p.u_max   # grant clamped
+    assert control_step(1 * GiB, 200 * GiB, p) == p.u_min   # reclaim clamped
+
+
+def test_pressure_shrinks_slack_grows():
+    p = paper_controller_params()
+    u = 30 * GiB
+    assert control_step(u, 124 * GiB, p) < u     # r > r0 -> shrink
+    assert control_step(u, 80 * GiB, p) > u      # r < r0 -> grow
+
+
+@given(lam=st.floats(0.01, 1.99))
+@settings(max_examples=40, deadline=None)
+def test_stability_region(lam):
+    p = paper_controller_params(lam=lam)
+    assert is_stable(p)
+    assert closed_loop_eigenvalue(p) == pytest.approx(1 - lam)
+    demand = np.full(600, 60.0 * GiB)
+    trace = simulate_saturated_loop(p, demand, u0=p.u_max)
+    target = fixed_point_capacity(p, 60.0 * GiB)
+    t = settling_time(trace, target, tol_frac=0.05)
+    assert t is not None, "stable loop must settle"
+
+
+@given(lam=st.floats(2.05, 4.0))
+@settings(max_examples=15, deadline=None)
+def test_instability_beyond_two(lam):
+    p = paper_controller_params(lam=lam)
+    assert not is_stable(p)
+
+
+@given(lam=st.floats(0.05, 0.8))
+@settings(max_examples=25, deadline=None)
+def test_monotone_no_overshoot_for_lam_below_one(lam):
+    """Small lam: approach is monotone (paper picks 0.5).  The linearized
+    no-overshoot bound is lam <= 1; the true loop's gain grows with
+    distance from the fixed point (delta ~ lam*v*(r-r0)), so from a
+    u_max start monotonicity empirically needs lam <~ 0.85."""
+    p = paper_controller_params(lam=lam)
+    demand = np.full(400, 70.0 * GiB)
+    trace = simulate_saturated_loop(p, demand, u0=p.u_max)
+    target = fixed_point_capacity(p, 70.0 * GiB)
+    diffs = np.diff(trace)
+    assert (diffs <= 1e-6).all(), "capacity must fall monotonically"
+    assert trace[-1] >= target - 1e6
+
+
+@given(
+    u=st.floats(0, 60 * GiB),
+    v=st.floats(1 * GiB, 130 * GiB),
+)
+@settings(max_examples=100, deadline=None)
+def test_output_always_in_range(u, v):
+    p = paper_controller_params()
+    out = control_step(u, v, p)
+    assert p.u_min <= out <= p.u_max
+
+
+@given(
+    u=st.lists(st.floats(0, 60 * GiB), min_size=1, max_size=32),
+    d=st.floats(10 * GiB, 90 * GiB),
+)
+@settings(max_examples=30, deadline=None)
+def test_vectorized_matches_scalar(u, d):
+    p = paper_controller_params()
+    us = np.asarray(u)
+    vs = us + d                               # saturated store usage
+    vec = np.asarray(vectorized_step(
+        us, vs, total_memory=p.total_memory, r0=p.r0, lam=p.lam,
+        u_min=p.u_min, u_max=p.u_max))
+    ref = np.asarray([control_step(ui, vi, p) for ui, vi in zip(us, vs)])
+    np.testing.assert_allclose(vec, ref, rtol=1e-5)
+
+
+def test_settling_under_ten_intervals_at_paper_lambda():
+    """lambda=0.5 reaches the 2% band in < 1 s (10 intervals) -- the
+    responsiveness claim behind the paper's 100 ms interval choice."""
+    p = paper_controller_params()
+    demand = np.full(100, 75.0 * GiB)
+    trace = simulate_saturated_loop(p, demand, u0=p.u_max)
+    target = fixed_point_capacity(p, 75.0 * GiB)
+    assert settling_time(trace, target) <= 10
+
+
+def test_feedforward_reduces_burst_overshoot():
+    """Beyond-paper slope feedforward must cut peak utilization during a
+    steep ramp (this is §Perf controller-hillclimb hypothesis H1)."""
+    from repro.core.traces import hpcc_trace
+    demand = hpcc_trace(60.0, 0.1, seed=3)
+    p0 = paper_controller_params()
+    p1 = paper_controller_params(feedforward=1.0)
+
+    def peak_util(p):
+        u = p.u_max
+        v_prev = None
+        peak = 0.0
+        for d in demand:
+            v = d + u
+            peak = max(peak, v / p.total_memory)
+            u_next = control_step(u, v, p, v_prev=v_prev)
+            v_prev = v
+            u = u_next
+        return peak
+
+    assert peak_util(p1) <= peak_util(p0)

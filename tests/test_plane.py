@@ -1,0 +1,98 @@
+"""Monitoring plane: bus, aggregator, controller end-to-end."""
+
+import numpy as np
+
+from repro.core import (AGG_TOPIC, RAW_TOPIC, ControlPlane, GiB,
+                        MemorySample, MessageBus, MetricAggregator,
+                        ShardCache, SimulatedMonitor, StoreRegistry)
+from repro.core.cluster_sim import paper_controller_params
+
+
+class Blob:
+    def __init__(self, nbytes):
+        self.nbytes = nbytes
+
+
+def test_bus_pubsub_and_poll():
+    bus = MessageBus()
+    seen = []
+    unsub = bus.subscribe("t", seen.append)
+    bus.publish("t", 1)
+    bus.publish("t", 2)
+    assert seen == [1, 2]
+    assert bus.poll("t", group="g1") == [1, 2]
+    assert bus.poll("t", group="g1") == []
+    bus.publish("t", 3)
+    assert bus.poll("t", group="g1") == [3]
+    unsub()
+    bus.publish("t", 4)
+    assert seen == [1, 2, 3] or seen == [1, 2]  # unsubscribed
+
+
+def test_bus_isolates_subscriber_exceptions():
+    bus = MessageBus()
+    bus.subscribe("t", lambda m: 1 / 0)
+    bus.publish("t", "x")              # must not raise
+    assert len(bus.errors) == 1
+
+
+def test_sample_json_roundtrip():
+    s = MemorySample(node="n0", timestamp=1.5, used=10.0, total=100.0,
+                     storage_used=4.0)
+    assert MemorySample.from_json(s.to_json()) == s
+
+
+def test_aggregator_window_and_slope():
+    agg = MetricAggregator(window=4)
+    out = None
+    for i, used in enumerate([10, 20, 30, 40]):
+        out = agg.update(MemorySample("n", float(i), used, 100.0))
+    assert out.used_latest == 40
+    assert out.used_mean == 25
+    assert out.used_max == 40
+    assert abs(out.slope_per_interval - 10.0) < 1e-9
+
+
+def test_control_plane_closed_loop_burst():
+    """Full pipeline: burst -> cache shrinks within intervals; burst
+    clears -> cache regrows (paper Fig. 7 behaviour)."""
+    p = paper_controller_params()
+    plane = ControlPlane(p)
+    cache = ShardCache(capacity=60 * GiB, sizeof=lambda v: v.nbytes)
+    for i in range(60):
+        cache.put(i, Blob(1 * GiB))
+    reg = StoreRegistry()
+    reg.register(cache, max_bytes=60 * GiB)
+
+    usage = ([20 * GiB] * 10) + ([95 * GiB] * 20) + ([20 * GiB] * 40)
+    mon = SimulatedMonitor("n0", total=125 * GiB, usage=usage,
+                           storage_used_fn=cache.used)
+    plane.attach("n0", mon, reg, u0=60 * GiB)
+
+    caps = []
+    for _ in range(len(usage)):
+        plane.tick()
+        caps.append(cache.capacity() / GiB)
+    # burst (compute 95 GiB): u* = 0.95*125 - 95 = 23.75 GiB
+    assert min(caps[10:30]) < 30
+    # recovery: back to u_max
+    assert caps[-1] > 55
+    # actual evictions happened and usage tracked capacity
+    assert cache.used() <= cache.capacity()
+    assert cache.stats.evictions >= 25
+
+
+def test_control_actions_published():
+    p = paper_controller_params()
+    plane = ControlPlane(p)
+    cache = ShardCache(capacity=0, sizeof=lambda v: 1.0)
+    reg = StoreRegistry()
+    reg.register(cache, max_bytes=60 * GiB)
+    mon = SimulatedMonitor("n0", total=125 * GiB, usage=[50 * GiB] * 5)
+    plane.attach("n0", mon, reg)
+    for _ in range(5):
+        plane.tick()
+    from repro.core import CONTROL_TOPIC
+    actions = plane.bus.poll(CONTROL_TOPIC, group="test")
+    assert len(actions) == 5
+    assert all(a.node == "n0" for a in actions)

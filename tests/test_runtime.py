@@ -1,0 +1,85 @@
+"""Runtime: heartbeats/failures, stragglers, elastic re-meshing."""
+
+import pytest
+
+from repro.runtime import (ElasticMeshPlanner, HeartbeatMonitor,
+                           StragglerDetector)
+
+
+def test_heartbeat_failure_and_recovery():
+    mon = HeartbeatMonitor(interval_s=1.0, timeout_intervals=3)
+    failed, recovered = [], []
+    mon.on_failure(failed.append)
+    mon.on_recovery(recovered.append)
+    mon.heartbeat("w0", now=0.0)
+    mon.heartbeat("w1", now=0.0)
+    assert mon.check(now=2.0) == []          # within timeout
+    mon.heartbeat("w1", now=2.5)             # w1 stays alive, w0 silent
+    assert set(mon.check(now=4.0)) == {"w0"}
+    assert failed == ["w0"]
+    assert mon.failed_workers() == ["w0"]
+    assert mon.check(now=4.5) == []          # not re-reported
+    mon.heartbeat("w0", now=5.0)             # rejoin
+    assert recovered == ["w0"]
+    assert sorted(mon.healthy_workers()) == ["w0", "w1"]
+
+
+def test_straggler_squeeze_then_evict():
+    squeezed, evicted = [], []
+    det = StragglerDetector(window=8, threshold=1.5, grace=3,
+                            squeeze_cb=lambda w, f: squeezed.append((w, f)),
+                            evict_cb=evicted.append)
+    for i in range(8):
+        for w in ("w0", "w1", "w2", "w3"):
+            det.record(w, 1.0)
+        det.record("slow", 3.0)
+    r1 = det.check()
+    assert [r.worker for r in r1] == ["slow"]
+    assert r1[0].action == "squeeze"
+    det.check()
+    r3 = det.check()
+    assert r3[0].action == "evict"
+    assert evicted == ["slow"]
+    assert len(squeezed) == 2
+    assert all(0 < f < 1 for _, f in squeezed)
+
+
+def test_straggler_recovers_resets_strikes():
+    det = StragglerDetector(window=8, threshold=1.5, grace=3)
+    for _ in range(8):
+        for w in ("a", "b", "c"):
+            det.record(w, 1.0)
+        det.record("d", 2.0)
+    det.check()
+    for _ in range(8):                 # d recovers
+        for w in ("a", "b", "c", "d"):
+            det.record(w, 1.0)
+    assert det.check() == []
+    assert det._strikes["d"] == 0
+
+
+def test_elastic_planner_prefers_keeping_tp():
+    pl = ElasticMeshPlanner(model_axis=16)
+    full = pl.plan(256)
+    assert full.shape == (16, 16) and full.dropped == 0
+    degraded = pl.replan_after_failures(256, 16)
+    assert degraded.shape == (15, 16)
+    assert degraded.dropped == 0
+    odd = pl.plan(250)
+    assert odd.shape == (15, 16) and odd.dropped == 10
+
+
+def test_elastic_planner_degrades_tp_last_resort():
+    pl = ElasticMeshPlanner(model_axis=16)
+    tiny = pl.plan(12)
+    assert tiny.shape[1] == 8 and tiny.shape[0] == 1
+    with pytest.raises(RuntimeError):
+        pl.plan(0)
+
+
+def test_mesh_plan_materializes_on_cpu():
+    import jax
+    pl = ElasticMeshPlanner(model_axis=1, axis_names=("data", "model"))
+    plan = pl.plan(1)
+    mesh = plan.make(jax.devices())
+    assert mesh.devices.shape == (1, 1)

@@ -1,0 +1,102 @@
+"""Sharding policy units + a small real-device dry run.
+
+The full 512-device dry-run is `python -m repro.launch.dryrun --all`
+(results under results/dryrun/); here we test the policy logic and,
+in a subprocess with 8 forced host devices, one real lower+compile of
+each cell kind on a small mesh to keep the machinery honest in CI.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+
+
+def test_sharding_report_divisibility():
+    r = get_config("mistral-large-123b").sharding_report(16, 16)
+    assert r["attn_tp"] is True
+    assert "expanded" in r["attn_note"]
+    assert r["mlp_tp"] and r["vocab_tp"] and r["d_model_fsdp"]
+
+    r = get_config("qwen2-1.5b").sharding_report(16, 16)
+    assert r["attn_tp"] is False          # 12 heads % 16 != 0
+    assert r["mlp_tp"] is True
+
+    r = get_config("whisper-large-v3").sharding_report(16, 16)
+    assert r["attn_tp"] is False          # 20 heads % 16 != 0
+
+    r = get_config("qwen2-moe-a2.7b").sharding_report(16, 16)
+    assert r["experts_padded"] == 4       # 60 -> 64
+    assert r["attn_tp"] is True           # 16 heads, 16 kv
+
+
+def test_every_arch_has_a_report():
+    for a in ARCH_IDS:
+        r = get_config(a).sharding_report(16, 16)
+        assert r["mesh"] == {"data": 16, "model": 16}
+
+
+SUBPROCESS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+import jax
+from repro.launch.cells import CellSettings, build_cell
+from repro.launch.mesh import make_mesh
+from repro.roofline.analysis import analyze_compiled
+
+mesh = make_mesh((4, 2), ("data", "model"))
+jax.set_mesh(mesh)
+out = {}
+for arch, shape in [("llama3.2-1b-smoke", "train_4k"),
+                    ("llama3.2-1b-smoke", "prefill_32k"),
+                    ("llama3.2-1b-smoke", "decode_32k")]:
+    import repro.configs.base as B
+    import dataclasses
+    # shrink the benchmark shapes to smoke scale but keep the kinds
+    shp = B.SHAPES[shape]
+    small = dataclasses.replace(shp, seq_len=64, global_batch=8)
+    B_SHAPES = dict(B.SHAPES); B.SHAPES[shape] = small
+    try:
+        fn, inputs, desc = build_cell(arch, shape, mesh,
+                                      settings=CellSettings(microbatches=2 if shp.kind == "train" else 1,
+                                                            attn_impl="dense"))
+        compiled = jax.jit(fn).lower(*inputs).compile()
+        r = analyze_compiled(compiled, desc, 8)
+        out[shape] = {"flops": r["hlo_flops_per_chip"],
+                      "dominant": r["roofline"]["dominant"]}
+    finally:
+        B.SHAPES.update(B_SHAPES)
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_small_mesh_dryrun_all_kinds():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run([sys.executable, "-c", SUBPROCESS_SCRIPT],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert set(out) == {"train_4k", "prefill_32k", "decode_32k"}
+    assert all(v["flops"] > 0 for v in out.values())
+
+
+def test_dryrun_artifacts_if_present():
+    """When the full sweep has run, sanity-check its artifacts."""
+    d = "results/dryrun"
+    if not os.path.isdir(d) or not os.listdir(d):
+        pytest.skip("full dry-run not executed in this environment")
+    files = [f for f in os.listdir(d) if f.endswith(".json")]
+    assert len(files) >= 33
+    for f in files[:10]:
+        r = json.load(open(os.path.join(d, f)))
+        assert r["hlo_flops_per_chip"] > 0
+        assert r["roofline"]["dominant"] in ("compute", "memory",
+                                             "collective")

@@ -1,0 +1,97 @@
+"""Trainer integration: fit, checkpoint/restart exactness, DynIMS tick."""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.dynims import host_cache_params
+from repro.core import GiB
+from repro.core.controller import ControlPlane
+from repro.data import DataPipeline, PipelineConfig, ShardStore, write_corpus
+from repro.models import Model
+from repro.train import Trainer, TrainerConfig, TrainStepConfig
+
+
+@pytest.fixture(scope="module")
+def setup(tmp_path_factory):
+    tmp = tmp_path_factory.mktemp("trainer")
+    corpus = str(tmp / "corpus")
+    write_corpus(corpus, n_shards=8, tokens_per_shard=4096, vocab_size=503)
+    cfg = get_config("llama3.2-1b-smoke")
+    model = Model(cfg, remat="full", attn_impl="dense")
+    params = model.init(jax.random.key(0))
+    return tmp, corpus, cfg, model, params
+
+
+def make_trainer(tmp, corpus, model, steps, ckpt_dir, plane=None,
+                 schedule_steps=None):
+    pipe = DataPipeline(
+        ShardStore(corpus),
+        PipelineConfig(batch_size=4, seq_len=32, cache_bytes=1 << 20,
+                       prefetch_depth=0, dynims=plane is not None),
+        plane=plane)
+    return pipe, Trainer(
+        model, pipe,
+        TrainStepConfig(microbatches=2, warmup_steps=2,
+                        total_steps=schedule_steps or steps),
+        TrainerConfig(steps=steps, checkpoint_every=4,
+                      checkpoint_dir=ckpt_dir, log_every=2),
+        plane=plane)
+
+
+def test_loss_decreases(setup):
+    tmp, corpus, cfg, model, params = setup
+    pipe, tr = make_trainer(tmp, corpus, model, 14, str(tmp / "ck1"))
+    tr.fit(params)
+    losses = [r["loss"] for r in tr.metrics_log]
+    assert losses[-1] < losses[0]
+    pipe.close()
+
+
+def test_restart_is_exact(setup):
+    """Straight-through training and crash+resume must produce the SAME
+    final parameters (deterministic pipeline + checkpointed state)."""
+    tmp, corpus, cfg, model, params = setup
+
+    pipe1, tr1 = make_trainer(tmp, corpus, model, 8, str(tmp / "ckA"))
+    pA, _ = tr1.fit(params)
+    pipe1.close()
+
+    # crash after 4 steps (checkpoint_every=4), then resume to 8; the
+    # interrupted run keeps the SAME schedule horizon (8)
+    pipe2, tr2 = make_trainer(tmp, corpus, model, 4, str(tmp / "ckB"),
+                              schedule_steps=8)
+    tr2.fit(params)
+    pipe2.close()
+    pipe3, tr3 = make_trainer(tmp, corpus, model, 8, str(tmp / "ckB"))
+    pB, _ = tr3.resume(model.init(jax.random.key(42)))  # junk init
+    pipe3.close()
+
+    for a, b in zip(jax.tree.leaves(pA), jax.tree.leaves(pB)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, rtol=1e-5)
+
+
+def test_dynims_plane_ticks_during_training(setup):
+    tmp, corpus, cfg, model, params = setup
+    plane = ControlPlane(host_cache_params(64 * GiB))
+    pipe, tr = make_trainer(tmp, corpus, model, 6, str(tmp / "ck2"),
+                            plane=plane)
+    tr.fit(params)
+    assert len(plane.controller.actions) >= 6
+    assert pipe.hit_ratio >= 0.0
+    pipe.close()
+
+
+def test_straggler_squeeze_shrinks_cache(setup):
+    tmp, corpus, cfg, model, params = setup
+    plane = ControlPlane(host_cache_params(64 * GiB))
+    pipe, tr = make_trainer(tmp, corpus, model, 4, str(tmp / "ck3"),
+                            plane=plane)
+    cap0 = pipe.cache.capacity()
+    tr._squeeze_worker("localhost", 0.5)
+    assert pipe.cache.capacity() <= cap0 * 0.5 + 1
+    pipe.close()
