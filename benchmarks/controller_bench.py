@@ -1,0 +1,125 @@
+"""Controller-backend benchmark: scalar per-node loop vs ArrayController.
+
+Times one control interval's *decision stage* at fleet sizes 64 / 1024 /
+4096 nodes, two ways:
+
+* ``law_scalar_ms`` -- the per-node Python loop the legacy controller
+  dispatch ran: one float64 ``control_step`` call per node.
+* ``law_array_ms``  -- the ArrayController's fused jitted update: one
+  XLA dispatch for the whole fleet (``make_fused_step``).
+
+plus, for context, the full ``MemoryPlane.tick`` (monitor sampling +
+bus + aggregation + decide + actuate) for both backends, which shares
+the per-node Python observation path and therefore dilutes the ratio.
+
+Writes ``BENCH_controller.json`` next to the repo root and prints a
+table.  Usage:
+
+    PYTHONPATH=src python benchmarks/controller_bench.py [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+FLEET_SIZES = (64, 1024, 4096)
+REPEATS = 30
+
+
+def _bench(fn, repeats: int = REPEATS) -> float:
+    """Median wall-time of ``fn()`` in milliseconds."""
+    fn()                                   # warmup (jit compile, caches)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e3)
+    return float(np.median(times))
+
+
+def bench_fleet(n_nodes: int, seed: int = 0) -> dict:
+    import jax.numpy as jnp
+
+    from repro.core import (ControllerParams, GiB, MemoryPlane, NodeSpec,
+                            PlaneSpec, SimulatedMonitor, StoreRegistry,
+                            control_step, make_fused_step)
+
+    rng = np.random.default_rng(seed)
+    params = ControllerParams(total_memory=125.0 * GiB)
+    u = rng.uniform(0.0, 60.0, n_nodes) * GiB
+    v = rng.uniform(60.0, 125.0, n_nodes) * GiB
+
+    # -- decision stage: per-node Python loop (legacy dispatch shape) -----
+    def law_scalar():
+        return [control_step(ui, vi, params) for ui, vi in zip(u, v)]
+
+    # -- decision stage: one fused jitted update for the fleet ------------
+    fused = make_fused_step(params)
+    u32 = jnp.asarray(u, jnp.float32)
+    v32 = jnp.asarray(v, jnp.float32)
+    ones = jnp.ones(n_nodes, bool)
+    m32 = jnp.full(n_nodes, params.total_memory, jnp.float32)
+    lo = jnp.full(n_nodes, params.u_min, jnp.float32)
+    hi = jnp.full(n_nodes, params.u_max, jnp.float32)
+
+    def law_array():
+        return fused(u32, v32, v32, ones, ones, m32, lo, hi).block_until_ready()
+
+    law_scalar_ms = _bench(law_scalar)
+    law_array_ms = _bench(law_array)
+
+    # -- full plane tick per backend (shared monitor/bus/agg overhead) ----
+    def build_plane(backend: str) -> MemoryPlane:
+        demand = rng.uniform(60.0, 125.0, n_nodes) * GiB
+        return MemoryPlane(PlaneSpec(
+            params=params, backend=backend,
+            nodes=tuple(
+                NodeSpec(f"n{i}",
+                         monitor=SimulatedMonitor(
+                             f"n{i}", total=params.total_memory,
+                             usage=lambda _t, d=demand[i]: d),
+                         registry=StoreRegistry(), u0=u[i])
+                for i in range(n_nodes))))
+
+    tick_scalar_ms = _bench(build_plane("scalar").tick, repeats=5)
+    tick_array_ms = _bench(build_plane("array").tick, repeats=5)
+
+    return {
+        "n_nodes": n_nodes,
+        "law_scalar_ms": law_scalar_ms,
+        "law_array_ms": law_array_ms,
+        "law_speedup": law_scalar_ms / law_array_ms,
+        "tick_scalar_ms": tick_scalar_ms,
+        "tick_array_ms": tick_array_ms,
+        "tick_speedup": tick_scalar_ms / tick_array_ms,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    default_out = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_controller.json")
+    ap.add_argument("--out", default=default_out)
+    ap.add_argument("--sizes", type=int, nargs="*", default=list(FLEET_SIZES))
+    args = ap.parse_args()
+
+    results = [bench_fleet(n) for n in args.sizes]
+    with open(args.out, "w") as fh:
+        json.dump({"interval_decision_stage": results}, fh, indent=2)
+
+    print(f"{'nodes':>6} {'law scalar':>11} {'law array':>10} {'speedup':>8} "
+          f"{'tick scalar':>12} {'tick array':>11}")
+    for r in results:
+        print(f"{r['n_nodes']:6d} {r['law_scalar_ms']:9.3f}ms "
+              f"{r['law_array_ms']:8.3f}ms {r['law_speedup']:7.1f}x "
+              f"{r['tick_scalar_ms']:10.2f}ms {r['tick_array_ms']:9.2f}ms")
+    print(f"\nwrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,14 +2,16 @@
 
 A 125 GB node runs a compute job with a memory burst while an in-memory
 store (here: a byte cache standing in for Alluxio / a dataset cache /
-a KV pool) opportunistically uses the slack.  The controller keeps
-utilization at the 95% threshold, evicting within one 100 ms interval.
+a KV pool) opportunistically uses the slack.  The whole pipeline is
+declared once -- a ``PlaneSpec`` naming the node, its monitor, and its
+store -- and the ``MemoryPlane`` keeps utilization at the 95% threshold,
+evicting within one 100 ms interval.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core import (ControlPlane, GiB, ShardCache, SimulatedMonitor,
-                        StoreRegistry)
+from repro.core import (GiB, MemoryPlane, NodeSpec, PlaneSpec, ShardCache,
+                        SimulatedMonitor, StoreSpec)
 from repro.core.cluster_sim import paper_controller_params
 
 
@@ -23,17 +25,20 @@ def main():
     cache = ShardCache(capacity=60 * GiB)
     for shard in range(60):
         cache.put(shard, Blob(1 * GiB))
-    registry = StoreRegistry()
-    registry.register(cache, max_bytes=60 * GiB)
 
     # the priority tenant: 20 GB baseline with a burst to 95 GB
     compute = [20 * GiB] * 10 + [95 * GiB] * 15 + [20 * GiB] * 25
 
-    plane = ControlPlane(paper_controller_params())   # Table I
-    plane.attach("node0",
-                 SimulatedMonitor("node0", total=125 * GiB, usage=compute,
-                                  storage_used_fn=cache.used),
-                 registry)
+    # declare the plane: Table I law + one node (monitor + one store)
+    plane = MemoryPlane(PlaneSpec(
+        params=paper_controller_params(),
+        nodes=(NodeSpec(
+            "node0",
+            monitor=SimulatedMonitor("node0", total=125 * GiB,
+                                     usage=compute,
+                                     storage_used_fn=cache.used),
+            stores=(StoreSpec(cache, max_bytes=60 * GiB),)),),
+    ))
 
     print(f"{'interval':>8} {'compute':>9} {'cache cap':>10} "
           f"{'cache used':>10} {'util':>6}")
@@ -46,6 +51,10 @@ def main():
           f"bytes evicted: {cache.stats.bytes_evicted/GiB:.0f} GiB "
           f"-- and capacity recovered to "
           f"{cache.capacity()/GiB:.0f} GiB after the burst")
+    last = plane.actions(node="node0", limit=1)[0]
+    print(f"last action: u {last.u_prev/GiB:.1f}G -> {last.u_next/GiB:.1f}G "
+          f"at {last.utilization:.0%} utilization "
+          f"({len(plane.actions())} retained, bounded history)")
 
 
 if __name__ == "__main__":

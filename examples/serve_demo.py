@@ -1,10 +1,13 @@
 """Serving demo: continuous batching with a DynIMS-managed KV pool.
 
-A small llama-family model serves a queue of requests; mid-run the KV
-pool is squeezed (simulating a device-memory burst from a co-located
-job), sequences are preempted and transparently requeued, and service
-completes after the pool recovers -- the paper's eviction/recovery
-behaviour on the serving path.
+A small llama-family model serves a queue of requests while a
+``MemoryPlane`` arbitrates the device-memory budget between the compute
+tenant (a simulated co-located job with a mid-run burst) and the KV
+block pool.  When the burst drives utilization past the threshold the
+controller shrinks the pool within one interval, sequences are
+preempted and transparently requeued, and service completes after the
+controller re-grants capacity -- the paper's eviction/recovery
+behaviour, end-to-end on the serving path.
 
     PYTHONPATH=src python examples/serve_demo.py
 """
@@ -13,6 +16,9 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.configs.dynims import hbm_pool_params
+from repro.core import (KVBlockPool, MemoryPlane, PlaneSpec,
+                        SimulatedMonitor)
 from repro.models import Model
 from repro.serving import ServingConfig, ServingEngine
 
@@ -21,33 +27,50 @@ def main():
     cfg = get_config("llama3.2-1b-smoke")
     model = Model(cfg, remat="none")
     params = model.init(jax.random.key(0))
-    engine = ServingEngine(model, params,
-                           ServingConfig(max_batch=3, max_len=96,
-                                         block_tokens=8))
+    sc = ServingConfig(max_batch=3, max_len=96, block_tokens=8)
+
+    # Size the contended "HBM" so the pool is half of it: a compute
+    # burst to ~0.9*M forces the controller to reclaim pool capacity.
+    kv_bytes = (sc.block_tokens * 2 * cfg.n_kv_heads * cfg.head_dim * 2
+                * cfg.n_layers)
+    n_blocks = sc.max_batch * (sc.max_len // sc.block_tokens)
+    hbm = 2.0 * n_blocks * kv_bytes
+    pool = KVBlockPool("kv-pool", n_blocks, kv_bytes)
+
+    # the co-located compute tenant: quiet, a burst over ticks 12-24, quiet
+    def compute_usage(i):
+        return 0.90 * hbm if 12 <= i < 24 else 0.05 * hbm
+
+    plane = MemoryPlane(PlaneSpec(params=hbm_pool_params(hbm)))
+    engine = ServingEngine(
+        model, params, sc, pool=pool, plane=plane, node="serve0",
+        monitor=SimulatedMonitor("serve0", total=hbm, usage=compute_usage,
+                                 storage_used_fn=pool.used))
     rng = np.random.default_rng(0)
     for i in range(8):
         engine.submit(rng.integers(0, cfg.vocab_size, 10), 12)
-    print(f"submitted 8 requests; pool = {engine.pool.total_blocks} blocks")
+    print(f"submitted 8 requests; pool = {pool.total_blocks} blocks, "
+          f"plane manages {hbm/2**20:.1f} MiB of device memory")
 
     for step in range(12):
         engine.step()
-    print("mid-run:", engine.stats())
+    print("quiet phase:", engine.stats())
 
-    print("\n-- memory burst: KV pool shrunk to 3 blocks --")
-    engine.pool.set_capacity(engine.pool.block_bytes * 3)
-    for step in range(6):
+    print("\n-- co-located burst: the controller reclaims pool blocks --")
+    for step in range(12):
         engine.step()
     print("during burst:", engine.stats())
 
-    print("\n-- burst over: pool restored --")
-    engine.pool.set_capacity(engine.pool.total_blocks
-                             * engine.pool.block_bytes)
+    print("\n-- burst over: the controller re-grants within intervals --")
     finished = engine.run_until_drained()
     st = engine.stats()
     print("drained:", st)
     assert len(finished) == 8
     print(f"\nall 8 requests completed; {st['preemptions']} preemption(s) "
           "were absorbed transparently (progress preserved)")
+    for a in plane.actions(node="serve0", limit=3):
+        print(f"  action: u {a.u_prev/2**20:6.1f}M -> {a.u_next/2**20:6.1f}M"
+              f"  (util {a.utilization:.0%})")
 
 
 if __name__ == "__main__":

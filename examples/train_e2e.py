@@ -20,8 +20,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.configs.dynims import host_cache_params
-from repro.core import GiB
-from repro.core.controller import ControlPlane
+from repro.core import GiB, MemoryPlane, PlaneSpec
 from repro.data import DataPipeline, PipelineConfig, ShardStore, write_corpus
 from repro.models import Model, count_params
 from repro.train import Trainer, TrainerConfig, TrainStepConfig
@@ -52,7 +51,7 @@ def main():
     corpus = os.path.join(tmp, "corpus")
     write_corpus(corpus, n_shards=16, tokens_per_shard=65536,
                  vocab_size=cfg.vocab_size)
-    plane = ControlPlane(host_cache_params(32 * GiB))
+    plane = MemoryPlane(PlaneSpec(params=host_cache_params(32 * GiB)))
     pipe = DataPipeline(
         ShardStore(corpus),
         PipelineConfig(batch_size=args.batch_size, seq_len=args.seq_len,

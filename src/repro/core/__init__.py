@@ -9,22 +9,36 @@ evaluation:
 * :mod:`.stream`     -- stream aggregation (Flink analogue)
 * :mod:`.control`    -- the Eq. 1 feedback law + stability analysis
 * :mod:`.controller` -- the memory controller service (Vert.x analogue)
+* :mod:`.plane`      -- **MemoryPlane**, the declarative control-plane
+  API every consumer builds on (PlaneSpec -> MemoryPlane facade)
 * :mod:`.eviction`   -- LFU/LRU/FIFO/adaptive eviction policies
 * :mod:`.store`      -- managed stores: ShardCache, KVBlockPool
 * :mod:`.traces`     -- HPCC/HPL workload models (paper Figs 1-2)
 * :mod:`.cluster_sim`-- discrete-event reproduction of Sec. IV
+
+The control plane has two interchangeable backends behind one facade:
+the scalar reference controller (:class:`DynIMSController`, float64
+per-node Eq. 1, paper-faithful) and the batched
+:class:`ArrayController` (all nodes packed into arrays, one fused
+jitted ``vectorized_step`` per interval -- the 1000+-node path).
+Consumers pick via ``PlaneSpec(backend=...)``; a parity test pins the
+backends together.  The legacy imperative :class:`ControlPlane` remains
+as a deprecation shim over the scalar backend.
 """
 
 from .bus import MessageBus
-from .control import (ControllerParams, closed_loop_eigenvalue, control_step,
-                      fixed_point_capacity, is_stable, settling_time,
-                      simulate_saturated_loop, vectorized_step)
-from .controller import (CONTROL_TOPIC, ControlAction, ControlPlane,
+from .control import (ControllerParams, Signal, closed_loop_eigenvalue,
+                      control_step, fixed_point_capacity, is_stable,
+                      settling_time, simulate_saturated_loop,
+                      vectorized_step)
+from .controller import (ActionHistory, CONTROL_TOPIC, ControlAction,
                          DynIMSController)
 from .eviction import (AdaptivePolicy, FIFOPolicy, LFUPolicy, LRUPolicy,
                        make_policy)
 from .monitor import (DeviceMemoryMonitor, HostMemoryMonitor, MemorySample,
                       SimulatedMonitor)
+from .plane import (ArrayController, ControlPlane, MemoryPlane, NodeSpec,
+                    PlaneSpec, StoreSpec, make_fused_step)
 from .store import (EvictionReport, KVBlockPool, ManagedStore, ShardCache,
                     StoreRegistry, StoreStats)
 from .stream import AGG_TOPIC, RAW_TOPIC, AggregatedMetrics, MetricAggregator
@@ -32,14 +46,16 @@ from .traces import (GiB, IterativeAppSpec, Phase, TierSpec, hpcc_trace,
                      hpl_slowdown)
 
 __all__ = [
-    "AGG_TOPIC", "AdaptivePolicy", "AggregatedMetrics", "CONTROL_TOPIC",
-    "ControlAction", "ControlPlane", "ControllerParams",
-    "DeviceMemoryMonitor", "DynIMSController", "EvictionReport",
-    "FIFOPolicy", "GiB", "HostMemoryMonitor", "IterativeAppSpec",
-    "KVBlockPool", "LFUPolicy", "LRUPolicy", "ManagedStore", "MemorySample",
-    "MessageBus", "MetricAggregator", "Phase", "RAW_TOPIC", "ShardCache",
-    "SimulatedMonitor", "StoreRegistry", "StoreStats", "TierSpec",
-    "closed_loop_eigenvalue", "control_step", "fixed_point_capacity",
-    "hpcc_trace", "hpl_slowdown", "is_stable", "make_policy",
-    "settling_time", "simulate_saturated_loop", "vectorized_step",
+    "AGG_TOPIC", "ActionHistory", "AdaptivePolicy", "AggregatedMetrics",
+    "ArrayController", "CONTROL_TOPIC", "ControlAction", "ControlPlane",
+    "ControllerParams", "DeviceMemoryMonitor", "DynIMSController",
+    "EvictionReport", "FIFOPolicy", "GiB", "HostMemoryMonitor",
+    "IterativeAppSpec", "KVBlockPool", "LFUPolicy", "LRUPolicy",
+    "ManagedStore", "MemoryPlane", "MemorySample", "MessageBus",
+    "MetricAggregator", "NodeSpec", "Phase", "PlaneSpec", "RAW_TOPIC",
+    "ShardCache", "Signal", "SimulatedMonitor", "StoreRegistry",
+    "StoreSpec", "StoreStats", "TierSpec", "closed_loop_eigenvalue",
+    "control_step", "fixed_point_capacity", "hpcc_trace", "hpl_slowdown",
+    "is_stable", "make_fused_step", "make_policy", "settling_time",
+    "simulate_saturated_loop", "vectorized_step",
 ]

@@ -9,8 +9,9 @@ opportunistic storage tenant).  This module models that testbed:
   45 GB for the Spark-only config with an RDD cache); an HPCC job whose
   usage follows :func:`~repro.core.traces.hpcc_trace`; an in-memory
   block cache (the Alluxio worker) whose capacity is either static or
-  driven by a real :class:`~repro.core.controller.ControlPlane` at the
-  paper's 100 ms interval,
+  driven by a real :class:`~repro.core.plane.MemoryPlane` at the
+  paper's 100 ms interval (scalar reference backend: bit-exact float64
+  reproduction of the paper's per-node law),
 * a 2-node data tier: shared disk + network bandwidth (readers divide
   it) and a 160 GB aggregate LRU OS buffer cache,
 * the iterative app: each iteration every node scans its partition
@@ -37,8 +38,8 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .control import ControllerParams
-from .controller import ControlPlane
 from .eviction import LFUPolicy
+from .plane import MemoryPlane, NodeSpec, PlaneSpec
 from .monitor import SimulatedMonitor
 from .store import ShardCache, StoreRegistry
 from .traces import (GiB, IterativeAppSpec, TierSpec, hpcc_trace,
@@ -209,16 +210,23 @@ def simulate(cfg: SimConfig) -> SimResult:
     trace = (hpcc_trace(cfg.hpcc_duration_s, cfg.interval_s, seed=cfg.seed)
              if cfg.run_hpcc else np.zeros(1))
 
-    plane: Optional[ControlPlane] = None
+    plane: Optional[MemoryPlane] = None
     if cfg.controller is not None:
-        plane = ControlPlane(cfg.controller)
-        for node in nodes:
-            monitor = SimulatedMonitor(
-                node=f"node{node.idx}", total=cfg.node_memory_gib * GiB,
-                usage=_UsageProbe(node, trace),
-                storage_used_fn=node.cache.used, dt=cfg.interval_s)
-            plane.attach(f"node{node.idx}", monitor, node.registry,
-                         u0=cfg.ramdisk_gib * GiB)
+        plane = MemoryPlane(PlaneSpec(
+            params=cfg.controller,
+            backend="scalar",    # float64 reference law, paper-faithful
+            nodes=tuple(
+                NodeSpec(
+                    name=f"node{node.idx}",
+                    monitor=SimulatedMonitor(
+                        node=f"node{node.idx}",
+                        total=cfg.node_memory_gib * GiB,
+                        usage=_UsageProbe(node, trace),
+                        storage_used_fn=node.cache.used,
+                        dt=cfg.interval_s),
+                    registry=node.registry,
+                    u0=cfg.ramdisk_gib * GiB)
+                for node in nodes)))
 
     dt = cfg.interval_s
     t = 0.0

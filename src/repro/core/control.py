@@ -37,6 +37,7 @@ Beyond-paper extensions (all default to the paper-faithful behaviour):
 from __future__ import annotations
 
 import dataclasses
+import enum
 from typing import Optional
 
 import jax
@@ -44,6 +45,32 @@ import jax.numpy as jnp
 import numpy as np
 
 GiB = float(2**30)
+
+
+class Signal(enum.Enum):
+    """Which aggregate of the usage window drives Eq. 1.
+
+    Replaces the stringly-typed ``signal="latest"`` knob; plain strings
+    are still accepted anywhere a :class:`Signal` is expected via
+    :meth:`coerce`.
+    """
+
+    LATEST = "latest"
+    EWMA = "ewma"
+    MAX = "max"
+
+    @classmethod
+    def coerce(cls, value: "Signal | str") -> "Signal":
+        if isinstance(value, Signal):
+            return value
+        try:
+            return cls(str(value).lower())
+        except ValueError:
+            raise ValueError("signal must be latest|ewma|max") from None
+
+    def pick(self, agg) -> float:
+        """Extract this signal's value from an ``AggregatedMetrics``."""
+        return float(getattr(agg, f"used_{self.value}"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,11 +174,13 @@ def vectorized_step(
         v_eff = v + feedforward * (v - jnp.asarray(v_prev, jnp.float32))
     r = v_eff / total_memory
     err = r - r0
-    lam_eff = jnp.where(
-        (err < 0) & (lam_grant is not None),
-        lam_grant if lam_grant is not None else lam,
-        lam,
-    )
+    # Gain selection is resolved at trace time: ``lam_grant`` is a Python
+    # constant, so the symmetric case jits to a single multiply and the
+    # asymmetric case to one select on the sign of the error.
+    if lam_grant is None:
+        lam_eff = lam
+    else:
+        lam_eff = jnp.where(err < 0, lam_grant, lam)
     delta = lam_eff * v_eff * err / r0
     u_next = jnp.where(jnp.abs(err) <= deadband, u, u - delta)
     return jnp.clip(u_next, u_min, u_max)

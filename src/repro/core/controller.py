@@ -1,9 +1,25 @@
-"""The DynIMS controller (the paper's Vert.x component).
+"""The DynIMS memory-controller service (the paper's Vert.x component).
 
 Event-driven: subscribes to aggregated metrics on the bus, runs the
-control law per node, and actuates the node's registered stores through
-a :class:`~repro.core.store.StoreRegistry`.  Also usable synchronously
-(``step``) by the trainer/serving loop and the cluster simulator.
+control law, and actuates each node's registered stores through a
+:class:`~repro.core.store.StoreRegistry`.  Also usable synchronously by
+the trainer/serving loop and the cluster simulator.
+
+Two backends implement the same observe -> decide -> actuate contract
+(see :mod:`repro.core.plane` for the facade that wires them):
+
+* :class:`DynIMSController` -- the scalar *reference* backend.  Steps
+  each node's Eq. 1 in Python the moment its aggregate arrives, exactly
+  as the paper's per-node controller would.  Authoritative for
+  semantics; the parity test pins the batched backend to it.
+* :class:`~repro.core.plane.ArrayController` -- the *batched* backend.
+  Packs all attached nodes' ``(u, v, v_prev, M, u_min, u_max)`` into
+  arrays and runs one fused, jitted ``vectorized_step`` per control
+  interval, the shape a 1000+-node central controller needs.
+
+Both keep a bounded, thread-safe :class:`ActionHistory` instead of an
+unbounded action list -- the memory controller must not itself grow
+without bound.
 
 The paper's controller is a separate service receiving Kafka messages;
 ours runs in-process per host (sub-ms actuation) but keeps the same
@@ -14,17 +30,19 @@ a multi-host deployment only swaps the bus transport.
 from __future__ import annotations
 
 import threading
-import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from .bus import MessageBus
-from .control import ControllerParams, control_step
-from .monitor import MemoryMonitor, MemorySample
+from .control import ControllerParams, Signal, control_step
 from .store import EvictionReport, StoreRegistry
-from .stream import AGG_TOPIC, RAW_TOPIC, AggregatedMetrics, MetricAggregator
+from .stream import AGG_TOPIC, AggregatedMetrics
 
 CONTROL_TOPIC = "control.actions"
+
+#: Default bound on retained control actions (per controller).
+DEFAULT_HISTORY = 1024
 
 
 @dataclass
@@ -43,47 +61,131 @@ class ControlAction:
         return self.u_next - self.u_prev
 
 
+class ActionHistory:
+    """Bounded, thread-safe log of control actions.
+
+    Keeps the last ``maxlen`` actions for observability.  With
+    ``track_fresh=True`` it additionally buffers every action since the
+    last :meth:`drain` so a driver (``MemoryPlane.tick``) can return a
+    complete interval even when the fleet is larger than ``maxlen``;
+    the buffer is a plain list emptied on each drain, so only a driver
+    that actually drains should enable it (a standalone event-driven
+    controller would otherwise grow it without bound).
+    """
+
+    def __init__(self, maxlen: int = DEFAULT_HISTORY,
+                 track_fresh: bool = False):
+        if maxlen < 1:
+            raise ValueError("history bound must be >= 1")
+        self.maxlen = maxlen
+        self._lock = threading.Lock()
+        self._log: deque = deque(maxlen=maxlen)
+        self._track_fresh = track_fresh
+        self._fresh: List[ControlAction] = []
+
+    def append(self, action: ControlAction) -> None:
+        with self._lock:
+            self._log.append(action)
+            if self._track_fresh:
+                self._fresh.append(action)
+
+    def snapshot(self, node: Optional[str] = None,
+                 limit: Optional[int] = None) -> List[ControlAction]:
+        with self._lock:
+            out = list(self._log)
+        if node is not None:
+            out = [a for a in out if a.node == node]
+        if limit is not None:
+            out = out[-limit:]
+        return out
+
+    def drain(self) -> List[ControlAction]:
+        """All actions appended since the last drain (requires
+        ``track_fresh``; empty otherwise)."""
+        with self._lock:
+            out, self._fresh = self._fresh, []
+        return out
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._log)
+
+
 @dataclass
 class _NodeState:
     registry: StoreRegistry
     u: float
     v_prev: Optional[float] = None
+    params: Optional[ControllerParams] = None   # per-node override
 
 
 class DynIMSController:
-    """Per-node feedback control of registered in-memory stores."""
+    """Per-node feedback control of registered in-memory stores.
+
+    The scalar reference backend: one float64 Python ``control_step``
+    per node per observation, exactly the paper's per-node law.
+    """
 
     def __init__(
         self,
         params: ControllerParams,
         bus: Optional[MessageBus] = None,
-        signal: str = "latest",          # latest|ewma|max -- which aggregate drives Eq.1
+        signal: Signal | str = Signal.LATEST,
+        max_history: int = DEFAULT_HISTORY,
+        track_fresh: bool = False,
     ) -> None:
-        if signal not in ("latest", "ewma", "max"):
-            raise ValueError("signal must be latest|ewma|max")
         self.params = params
-        self.signal = signal
+        self.signal = Signal.coerce(signal)
         self._nodes: Dict[str, _NodeState] = {}
         self._bus = bus
         self._lock = threading.RLock()
-        self.actions: List[ControlAction] = []
+        self._history = ActionHistory(max_history, track_fresh=track_fresh)
         if bus is not None:
             bus.subscribe(AGG_TOPIC, self._on_agg)
 
     # -- wiring -------------------------------------------------------------
     def attach_node(self, node: str, registry: StoreRegistry,
-                    u0: Optional[float] = None) -> None:
+                    u0: Optional[float] = None,
+                    params: Optional[ControllerParams] = None) -> None:
+        """Register one node.  ``params`` overrides the plane-level law
+        parameters for this node (heterogeneous M / u_min / u_max)."""
         with self._lock:
             u = registry.total_capacity() if u0 is None else float(u0)
-            self._nodes[node] = _NodeState(registry=registry, u=u)
+            self._nodes[node] = _NodeState(registry=registry, u=u,
+                                           params=params)
 
     def node_capacity(self, node: str) -> float:
         with self._lock:
             return self._nodes[node].u
 
+    def nodes(self) -> List[str]:
+        with self._lock:
+            return list(self._nodes)
+
+    # -- bounded action history ---------------------------------------------
+    @property
+    def actions(self) -> List[ControlAction]:
+        """Snapshot of the bounded action history (thread-safe)."""
+        return self._history.snapshot()
+
+    def recent(self, n: Optional[int] = None,
+               node: Optional[str] = None) -> List[ControlAction]:
+        return self._history.snapshot(node=node, limit=n)
+
     # -- control ------------------------------------------------------------
     def _on_agg(self, agg: AggregatedMetrics) -> None:
         self.step(agg)
+
+    def observe(self, agg: AggregatedMetrics) -> None:
+        """Backend interface: the scalar backend acts immediately."""
+        self.step(agg)
+
+    def flush(self) -> List[ControlAction]:
+        """Backend interface: actions produced since the last flush.
+
+        Complete only when constructed with ``track_fresh=True`` (as
+        :class:`~repro.core.plane.MemoryPlane` does)."""
+        return self._history.drain()
 
     def step(self, agg: AggregatedMetrics) -> Optional[ControlAction]:
         """Run Eq. 1 for one node from one aggregated observation."""
@@ -91,12 +193,8 @@ class DynIMSController:
             state = self._nodes.get(agg.node)
             if state is None:
                 return None
-            v = {
-                "latest": agg.used_latest,
-                "ewma": agg.used_ewma,
-                "max": agg.used_max,
-            }[self.signal]
-            params = self.params
+            v = self.signal.pick(agg)
+            params = state.params or self.params
             if params.total_memory != agg.total and agg.total > 0:
                 params = params.replace(total_memory=agg.total)
             u_next = control_step(state.u, v, params, v_prev=state.v_prev)
@@ -107,67 +205,27 @@ class DynIMSController:
                 reports=reports)
             state.u = u_next
             state.v_prev = v
-            self.actions.append(action)
+            self._history.append(action)
         if self._bus is not None:
             self._bus.publish(CONTROL_TOPIC, action)
         return action
 
+    def squeeze(self, node: str, factor: float) -> bool:
+        """Transiently clamp a node's stores to ``factor * u`` without
+        moving the control state -- the controller re-grants on the next
+        interval once pressure clears (straggler mitigation hook)."""
+        with self._lock:
+            state = self._nodes.get(node)
+            if state is None:
+                return False
+            state.registry.apply_capacity(state.u * float(factor))
+            return True
 
-class ControlPlane:
-    """Full monitoring/control pipeline for a set of local nodes.
 
-    Wires monitor -> bus(RAW) -> aggregator -> bus(AGG) -> controller for
-    every attached node and drives them from one ``tick`` (the control
-    interval T).  ``run`` ticks in real time; ``tick`` is used by tests,
-    the simulator, and the trainer (which ticks from its step loop).
-    """
-
-    def __init__(
-        self,
-        params: ControllerParams,
-        window: int = 8,
-        ewma_alpha: float = 0.5,
-        signal: str = "latest",
-    ) -> None:
-        self.bus = MessageBus()
-        self.aggregator = MetricAggregator(window=window,
-                                           ewma_alpha=ewma_alpha, bus=self.bus)
-        self.controller = DynIMSController(params, bus=self.bus, signal=signal)
-        self._monitors: Dict[str, MemoryMonitor] = {}
-        self._stop = threading.Event()
-        self._thread: Optional[threading.Thread] = None
-
-    def attach(self, node: str, monitor: MemoryMonitor,
-               registry: StoreRegistry, u0: Optional[float] = None) -> None:
-        self._monitors[node] = monitor
-        self.controller.attach_node(node, registry, u0=u0)
-
-    def tick(self) -> List[ControlAction]:
-        """One control interval: sample every node, let control fire."""
-        n_before = len(self.controller.actions)
-        for monitor in self._monitors.values():
-            self.bus.publish(RAW_TOPIC, monitor.sample())
-        return self.controller.actions[n_before:]
-
-    # -- real-time loop -------------------------------------------------------
-    def run(self, duration_s: Optional[float] = None) -> None:
-        deadline = None if duration_s is None else time.time() + duration_s
-        while not self._stop.is_set():
-            t0 = time.time()
-            self.tick()
-            if deadline is not None and time.time() >= deadline:
-                break
-            sleep = self.controller.params.interval_s - (time.time() - t0)
-            if sleep > 0:
-                self._stop.wait(sleep)
-
-    def start(self) -> None:
-        self._stop.clear()
-        self._thread = threading.Thread(target=self.run, daemon=True)
-        self._thread.start()
-
-    def stop(self) -> None:
-        self._stop.set()
-        if self._thread is not None:
-            self._thread.join(timeout=5.0)
-            self._thread = None
+def __getattr__(name: str):
+    # Legacy import path: the ControlPlane shim now lives in plane.py
+    # (importing it here eagerly would be circular).
+    if name == "ControlPlane":
+        from .plane import ControlPlane
+        return ControlPlane
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,492 @@
+"""MemoryPlane: the declarative DynIMS control-plane API.
+
+The paper's DynIMS is *one* controller service adapting in-memory
+storage for all nodes from a single feedback loop (Eq. 1).  This module
+is that service's API surface: consumers declare *what* they manage --
+nodes, monitors, stores, eviction policy, signal, transport -- in a
+:class:`PlaneSpec` and hand it to a :class:`MemoryPlane`; they never
+touch bus/aggregator/controller internals.
+
+    spec = PlaneSpec(
+        params=paper_controller_params(),
+        nodes=(NodeSpec("node0", monitor=mon,
+                        stores=(StoreSpec(cache, max_bytes=60 * GiB),)),),
+    )
+    with MemoryPlane(spec) as plane:      # start()s the 100 ms loop
+        ...                               # or: plane.tick() per interval
+    print(plane.actions(node="node0", limit=8))
+
+Two controller backends sit behind the facade:
+
+* ``backend="scalar"`` -- :class:`~repro.core.controller.DynIMSController`,
+  the float64 per-node reference implementation.
+* ``backend="array"`` (default) -- :class:`ArrayController`, which packs
+  every attached node's ``(u, v, v_prev, M, u_min, u_max)`` into arrays
+  and runs **one fused, jitted** ``vectorized_step`` per control
+  interval.  This is the backend that scales to 1000+ nodes: per tick it
+  costs one XLA dispatch instead of N Python control-law evaluations
+  (see ``benchmarks/controller_bench.py``).
+
+A parity test (``tests/test_plane.py``) pins the two backends together
+within 1e-4 relative tolerance across heterogeneous fleets.
+
+``ControlPlane`` remains importable (also via its historical home
+``repro.core.controller``) as a deprecated shim over the scalar backend.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+import warnings
+from typing import Callable, Dict, Iterable, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bus import MessageBus
+from .control import ControllerParams, Signal, vectorized_step
+from .controller import (ActionHistory, CONTROL_TOPIC, ControlAction,
+                         DEFAULT_HISTORY, DynIMSController)
+from .monitor import MemoryMonitor
+from .store import ManagedStore, ShardCache, StoreRegistry
+from .stream import AGG_TOPIC, RAW_TOPIC, AggregatedMetrics, MetricAggregator
+
+BACKENDS = ("array", "scalar")
+
+
+# ---------------------------------------------------------------------------
+# Declarative spec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StoreSpec:
+    """One managed store and the most memory it may ever be granted."""
+
+    store: ManagedStore
+    max_bytes: float
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeSpec:
+    """One controlled node: who observes it and what gets resized.
+
+    ``stores`` builds a priority-waterfall :class:`StoreRegistry`;
+    alternatively pass a pre-built ``registry``.  ``u0`` seeds the
+    capacity state (default: the registry's current total capacity).
+    ``params`` overrides the plane-level law parameters for this node --
+    heterogeneous ``total_memory`` / ``u_min`` / ``u_max`` fleets.
+    """
+
+    name: str
+    monitor: MemoryMonitor
+    stores: Tuple[StoreSpec, ...] = ()
+    registry: Optional[StoreRegistry] = None
+    u0: Optional[float] = None
+    params: Optional[ControllerParams] = None
+
+    def build_registry(self) -> StoreRegistry:
+        if self.registry is not None:
+            if self.stores:
+                raise ValueError(
+                    "pass either stores or a pre-built registry, not both "
+                    "(stores would be silently unmanaged)")
+            return self.registry
+        registry = StoreRegistry()
+        for spec in self.stores:
+            store, max_bytes = (
+                (spec.store, spec.max_bytes) if isinstance(spec, StoreSpec)
+                else (spec[0], spec[1]))
+            registry.register(store, max_bytes=float(max_bytes))
+        return registry
+
+
+@dataclasses.dataclass(frozen=True)
+class PlaneSpec:
+    """Everything a control plane needs, declared up front.
+
+    Fields:
+      params:     plane-level Eq. 1 parameters (per-node overridable).
+      nodes:      nodes managed from construction (more can ``attach``).
+      signal:     which window aggregate drives the law (:class:`Signal`).
+      window:     sliding-window length of the aggregator.
+      ewma_alpha: EWMA smoothing factor of the aggregator.
+      backend:    "array" (fused batched law) or "scalar" (reference).
+      history:    bound on retained :class:`ControlAction` records.
+      eviction:   default eviction policy for caches built through
+                  :meth:`MemoryPlane.build_cache`.
+      transport:  the message bus, or a factory for one (swap point for
+                  a multi-host deployment); None -> in-process bus.
+    """
+
+    params: ControllerParams
+    nodes: Tuple[NodeSpec, ...] = ()
+    signal: Union[Signal, str] = Signal.LATEST
+    window: int = 8
+    ewma_alpha: float = 0.5
+    backend: str = "array"
+    history: int = DEFAULT_HISTORY
+    eviction: str = "lfu"
+    transport: Union[MessageBus, Callable[[], MessageBus], None] = None
+
+    def __post_init__(self) -> None:
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}")
+        object.__setattr__(self, "nodes", tuple(self.nodes))
+        object.__setattr__(self, "signal", Signal.coerce(self.signal))
+
+    def make_bus(self) -> MessageBus:
+        if self.transport is None:
+            return MessageBus()
+        if isinstance(self.transport, MessageBus):
+            return self.transport
+        return self.transport()
+
+
+# ---------------------------------------------------------------------------
+# Batched controller backend
+# ---------------------------------------------------------------------------
+
+def make_fused_step(params: ControllerParams):
+    """Build the jitted fleet update for one set of law gains.
+
+    Gains (``r0``/``lam``/``lam_grant``/``deadband``/``feedforward``)
+    are baked in as trace-time constants; capacities ``(u, v, v_prev,
+    M, u_min, u_max)`` are per-node ``(N,)`` arrays.  ``mask`` selects
+    the nodes observed this interval -- unobserved nodes pass through
+    unchanged, matching the event-driven scalar backend.
+    """
+    ff = params.feedforward
+
+    def fused(u, v, v_prev, has_prev, mask, m, u_min, u_max):
+        # A node with no previous observation runs without feedforward:
+        # substituting v for v_prev zeroes the slope term exactly.
+        vp = jnp.where(has_prev, v_prev, v) if ff > 0.0 else None
+        u_next = vectorized_step(
+            u, v, total_memory=m, r0=params.r0, lam=params.lam,
+            u_min=u_min, u_max=u_max, lam_grant=params.lam_grant,
+            deadband=params.deadband, v_prev=vp, feedforward=ff)
+        return jnp.where(mask, u_next, u)
+
+    return jax.jit(fused)
+
+
+_CAPACITY_FIELDS = ("total_memory", "u_min", "u_max")
+
+
+class ArrayController:
+    """Batched controller: all nodes' Eq. 1 in one fused jitted update.
+
+    State lives in packed per-node arrays; ``observe`` only buffers the
+    interval's aggregates (coalescing to the latest per node) and
+    ``flush`` runs the whole fleet's control law as a single XLA call,
+    then actuates each observed node's registry.  Decision cost per
+    interval is one dispatch regardless of fleet size -- the scaling
+    property the scalar per-node Python loop cannot deliver.
+
+    Per-node ``params`` overrides may vary only capacity fields
+    (``total_memory``/``u_min``/``u_max``); gains are trace-time
+    constants shared by the fleet.
+    """
+
+    def __init__(
+        self,
+        params: ControllerParams,
+        bus: Optional[MessageBus] = None,
+        signal: Signal | str = Signal.LATEST,
+        max_history: int = DEFAULT_HISTORY,
+    ) -> None:
+        self.params = params
+        self.signal = Signal.coerce(signal)
+        self._bus = bus
+        self._lock = threading.RLock()
+        self._history = ActionHistory(max_history)
+        self._names: List[str] = []
+        self._index: Dict[str, int] = {}
+        self._registries: List[StoreRegistry] = []
+        self._u = np.zeros(0, np.float64)
+        self._v_prev = np.zeros(0, np.float64)
+        self._has_prev = np.zeros(0, bool)
+        self._m = np.zeros(0, np.float64)
+        self._u_min = np.zeros(0, np.float64)
+        self._u_max = np.zeros(0, np.float64)
+        self._pending: Dict[str, AggregatedMetrics] = {}
+        self._fused = make_fused_step(params)
+        if bus is not None:
+            bus.subscribe(AGG_TOPIC, self.observe)
+
+    # -- wiring -------------------------------------------------------------
+    def attach_node(self, node: str, registry: StoreRegistry,
+                    u0: Optional[float] = None,
+                    params: Optional[ControllerParams] = None) -> None:
+        p = params or self.params
+        if params is not None:
+            for f in dataclasses.fields(params):
+                if f.name in _CAPACITY_FIELDS:
+                    continue
+                if getattr(params, f.name) != getattr(self.params, f.name):
+                    raise ValueError(
+                        "ArrayController per-node overrides may only vary "
+                        f"{_CAPACITY_FIELDS}; {f.name!r} differs (gains are "
+                        "fused trace-time constants)")
+        with self._lock:
+            if node in self._index:
+                raise ValueError(f"node {node!r} already attached")
+            u = registry.total_capacity() if u0 is None else float(u0)
+            self._index[node] = len(self._names)
+            self._names.append(node)
+            self._registries.append(registry)
+            self._u = np.append(self._u, u)
+            self._v_prev = np.append(self._v_prev, 0.0)
+            self._has_prev = np.append(self._has_prev, False)
+            self._m = np.append(self._m, p.total_memory)
+            self._u_min = np.append(self._u_min, p.u_min)
+            self._u_max = np.append(self._u_max, p.u_max)
+
+    def nodes(self) -> List[str]:
+        with self._lock:
+            return list(self._names)
+
+    def node_capacity(self, node: str) -> float:
+        with self._lock:
+            return float(self._u[self._index[node]])
+
+    # -- bounded action history ---------------------------------------------
+    @property
+    def actions(self) -> List[ControlAction]:
+        return self._history.snapshot()
+
+    def recent(self, n: Optional[int] = None,
+               node: Optional[str] = None) -> List[ControlAction]:
+        return self._history.snapshot(node=node, limit=n)
+
+    # -- control ------------------------------------------------------------
+    def observe(self, agg: AggregatedMetrics) -> None:
+        """Buffer one node's aggregate for the next ``flush``.
+
+        Multiple observations of a node within one interval coalesce to
+        the latest (the batched law steps once per interval)."""
+        with self._lock:
+            self._pending[agg.node] = agg
+
+    def flush(self) -> List[ControlAction]:
+        """One control interval: fused decide, then per-node actuation."""
+        with self._lock:
+            pending, self._pending = self._pending, {}
+            observed = sorted(
+                (self._index[n], n, a) for n, a in pending.items()
+                if n in self._index)
+            if not observed:
+                return []
+            n_nodes = self._u.size
+            mask = np.zeros(n_nodes, bool)
+            v = self._v_prev.copy()      # placeholder; masked out below
+            for i, _, agg in observed:
+                mask[i] = True
+                v[i] = self.signal.pick(agg)
+                if agg.total > 0 and agg.total != self._m[i]:
+                    self._m[i] = agg.total
+            u_next = np.asarray(self._fused(
+                jnp.asarray(self._u, jnp.float32),
+                jnp.asarray(v, jnp.float32),
+                jnp.asarray(self._v_prev, jnp.float32),
+                jnp.asarray(self._has_prev),
+                jnp.asarray(mask),
+                jnp.asarray(self._m, jnp.float32),
+                jnp.asarray(self._u_min, jnp.float32),
+                jnp.asarray(self._u_max, jnp.float32),
+            ), np.float64)
+            actions: List[ControlAction] = []
+            for i, name, agg in observed:
+                reports = self._registries[i].apply_capacity(u_next[i])
+                action = ControlAction(
+                    node=name, timestamp=agg.timestamp,
+                    u_prev=float(self._u[i]), u_next=float(u_next[i]),
+                    utilization=v[i] / agg.total if agg.total else 0.0,
+                    reports=reports)
+                actions.append(action)
+                self._history.append(action)
+                self._u[i] = u_next[i]
+                self._v_prev[i] = v[i]
+                self._has_prev[i] = True
+        if self._bus is not None:
+            for action in actions:
+                self._bus.publish(CONTROL_TOPIC, action)
+        return actions
+
+    def squeeze(self, node: str, factor: float) -> bool:
+        """Transient capacity clamp (see DynIMSController.squeeze)."""
+        with self._lock:
+            i = self._index.get(node)
+            if i is None:
+                return False
+            self._registries[i].apply_capacity(
+                float(self._u[i]) * float(factor))
+            return True
+
+
+# ---------------------------------------------------------------------------
+# The facade
+# ---------------------------------------------------------------------------
+
+class MemoryPlane:
+    """Declarative facade over the full DynIMS pipeline.
+
+    Wires monitor -> bus(RAW) -> aggregator -> bus(AGG) -> controller
+    backend for every declared/attached node and drives them all from
+    one ``tick`` (the control interval T).  ``run``/``start``/``stop``
+    tick in real time on a daemon thread; ``tick`` is used by tests, the
+    simulator, and the trainer (which ticks from its step loop).  The
+    plane is restartable and usable as a context manager.
+    """
+
+    def __init__(self, spec: PlaneSpec) -> None:
+        self.spec = spec
+        self.signal = spec.signal
+        self.bus = spec.make_bus()
+        self.aggregator = MetricAggregator(
+            window=spec.window, ewma_alpha=spec.ewma_alpha, bus=self.bus)
+        if spec.backend == "scalar":
+            self.controller: Union[DynIMSController, ArrayController] = \
+                DynIMSController(spec.params, bus=self.bus,
+                                 signal=spec.signal,
+                                 max_history=spec.history,
+                                 track_fresh=True)   # tick() drains
+        else:
+            self.controller = ArrayController(
+                spec.params, bus=self.bus, signal=spec.signal,
+                max_history=spec.history)
+        self._monitors: Dict[str, MemoryMonitor] = {}
+        self._lock = threading.RLock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        for node_spec in spec.nodes:
+            self._attach_spec(node_spec)
+
+    # -- wiring -------------------------------------------------------------
+    def _attach_spec(self, ns: NodeSpec) -> StoreRegistry:
+        return self.attach(ns.name, ns.monitor, ns.registry,
+                           stores=ns.stores, u0=ns.u0, params=ns.params)
+
+    def attach(
+        self,
+        node: str,
+        monitor: MemoryMonitor,
+        registry: Optional[StoreRegistry] = None,
+        *,
+        stores: Iterable[Union[StoreSpec, Tuple[ManagedStore, float]]] = (),
+        u0: Optional[float] = None,
+        params: Optional[ControllerParams] = None,
+    ) -> StoreRegistry:
+        """Bring one node under control; returns its registry.
+
+        Either pass a pre-built ``registry`` or an iterable of
+        :class:`StoreSpec` / ``(store, max_bytes)`` pairs (not both)."""
+        registry = NodeSpec(node, monitor, stores=tuple(stores),
+                            registry=registry).build_registry()
+        with self._lock:
+            self._monitors[node] = monitor
+            self.controller.attach_node(node, registry, u0=u0, params=params)
+        return registry
+
+    def build_cache(self, name: str, capacity: float, *,
+                    policy: Optional[str] = None, priority: int = 0,
+                    **kw) -> ShardCache:
+        """A ShardCache with the plane's declared eviction default."""
+        return ShardCache(name, capacity=capacity,
+                          policy=policy or self.spec.eviction,
+                          priority=priority, **kw)
+
+    # -- introspection ------------------------------------------------------
+    def nodes(self) -> List[str]:
+        return self.controller.nodes()
+
+    def capacity(self, node: str) -> float:
+        """Current granted storage capacity ``u`` for ``node`` (bytes)."""
+        return self.controller.node_capacity(node)
+
+    def actions(self, node: Optional[str] = None,
+                limit: Optional[int] = None) -> List[ControlAction]:
+        """Bounded, thread-safe view of recent control actions."""
+        return self.controller.recent(n=limit, node=node)
+
+    def squeeze(self, node: str, factor: float) -> bool:
+        """Transiently clamp a node's stores to ``factor`` of its grant
+        (straggler/burst mitigation); the law re-grants next interval."""
+        return self.controller.squeeze(node, factor)
+
+    # -- control loop -------------------------------------------------------
+    def tick(self) -> List[ControlAction]:
+        """One control interval: sample every node, run the law once."""
+        with self._lock:
+            monitors = list(self._monitors.values())
+        for monitor in monitors:
+            self.bus.publish(RAW_TOPIC, monitor.sample())
+        return self.controller.flush()
+
+    def run(self, duration_s: Optional[float] = None) -> None:
+        """Tick in real time at ``params.interval_s`` until stopped."""
+        deadline = (None if duration_s is None
+                    else time.time() + duration_s)
+        while not self._stop.is_set():
+            t0 = time.time()
+            self.tick()
+            if deadline is not None and time.time() >= deadline:
+                break
+            sleep = self.spec.params.interval_s - (time.time() - t0)
+            if sleep > 0:
+                self._stop.wait(sleep)
+
+    def start(self) -> None:
+        """Start (or restart) the real-time loop on a daemon thread."""
+        self.stop()
+        self._stop.clear()
+        self._thread = threading.Thread(target=self.run, daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def __enter__(self) -> "MemoryPlane":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+# ---------------------------------------------------------------------------
+# Legacy shim
+# ---------------------------------------------------------------------------
+
+class ControlPlane(MemoryPlane):
+    """Deprecated: imperative predecessor of :class:`MemoryPlane`.
+
+    Kept as a thin shim (scalar backend, old constructor signature) so
+    existing callers keep working; new code should declare a
+    :class:`PlaneSpec` and use :class:`MemoryPlane`.
+    """
+
+    def __init__(
+        self,
+        params: ControllerParams,
+        window: int = 8,
+        ewma_alpha: float = 0.5,
+        signal: Signal | str = "latest",
+        max_history: int = DEFAULT_HISTORY,
+    ) -> None:
+        warnings.warn(
+            "ControlPlane is deprecated; declare a PlaneSpec and use "
+            "MemoryPlane instead", DeprecationWarning, stacklevel=2)
+        super().__init__(PlaneSpec(
+            params=params, window=window, ewma_alpha=ewma_alpha,
+            signal=signal, backend="scalar", history=max_history))

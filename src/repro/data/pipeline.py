@@ -3,10 +3,12 @@
 This is the paper's architecture transplanted to a training job's input
 path: the shard store is the backing tier (OrangeFS), the in-host-RAM
 :class:`~repro.core.store.ShardCache` is the Alluxio worker, and a
-:class:`~repro.core.controller.ControlPlane` resizes it every interval
-so the *training process* (the priority tenant: parameters, optimizer
-mirrors, compilation workspace, staging buffers) never hits memory
-pressure while the cache soaks up all remaining host RAM.
+:class:`~repro.core.plane.MemoryPlane` resizes it every interval so the
+*training process* (the priority tenant: parameters, optimizer mirrors,
+compilation workspace, staging buffers) never hits memory pressure
+while the cache soaks up all remaining host RAM.  The pipeline only
+declares its store/monitor to the plane (``plane.attach``); it never
+touches bus or controller internals.
 
 Sampling is a deterministic function of (seed, step): restart-safe --
 after checkpoint restore the pipeline resumes exactly (no state files).
@@ -22,8 +24,8 @@ from typing import Iterator, Optional
 
 import numpy as np
 
-from ..core.controller import ControlPlane
 from ..core.monitor import HostMemoryMonitor
+from ..core.plane import MemoryPlane, StoreSpec
 from ..core.store import ShardCache, StoreRegistry
 from .shard_store import ShardStore
 
@@ -41,20 +43,22 @@ class PipelineConfig:
 
 class DataPipeline:
     def __init__(self, store: ShardStore, cfg: PipelineConfig,
-                 plane: Optional[ControlPlane] = None,
+                 plane: Optional[MemoryPlane] = None,
                  node: str = "localhost"):
         self.store = store
         self.cfg = cfg
         self.cache = ShardCache("dataset-cache", capacity=cfg.cache_bytes,
                                 policy=cfg.eviction, priority=0)
-        self._registry = StoreRegistry()
-        self._registry.register(self.cache, max_bytes=cfg.cache_bytes)
         self.plane = plane
         if plane is not None and cfg.dynims:
-            plane.attach(node,
-                         HostMemoryMonitor(node,
-                                           storage_used_fn=self.cache.used),
-                         self._registry, u0=cfg.cache_bytes)
+            self._registry = plane.attach(
+                node,
+                HostMemoryMonitor(node, storage_used_fn=self.cache.used),
+                stores=(StoreSpec(self.cache, cfg.cache_bytes),),
+                u0=cfg.cache_bytes)
+        else:
+            self._registry = StoreRegistry()
+            self._registry.register(self.cache, max_bytes=cfg.cache_bytes)
         self._prefetch_q: "queue.Queue[int]" = queue.Queue(maxsize=64)
         self._stop = threading.Event()
         self._prefetcher: Optional[threading.Thread] = None

@@ -30,15 +30,19 @@ def main() -> None:
     args = ap.parse_args()
 
     from ..configs import get_config
+    from ..configs.dynims import hbm_pool_params
+    from ..core.plane import MemoryPlane, PlaneSpec
     from ..models import Model
     from ..serving import ServingConfig, ServingEngine
 
     cfg = get_config(args.arch)
     model = Model(cfg, remat="none")
     params = model.init(jax.random.key(args.seed))
+    plane = MemoryPlane(PlaneSpec(params=hbm_pool_params()))
     engine = ServingEngine(model, params,
                            ServingConfig(max_batch=args.max_batch,
-                                         max_len=args.max_len))
+                                         max_len=args.max_len),
+                           plane=plane)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         engine.submit(rng.integers(0, cfg.vocab_size, args.prompt_len),
@@ -50,11 +54,10 @@ def main() -> None:
             engine.step()
         print("-- memory burst: shrinking KV pool to 25% --")
         engine.pool.set_capacity(engine.pool.capacity() * 0.25)
+        print("   (preempted sequences requeue; with no sustained device "
+              "pressure the plane re-grants capacity on the next tick)")
         for _ in range(5):
             engine.step()
-        print("-- burst over: restoring pool --")
-        engine.pool.set_capacity(
-            engine.pool.total_blocks * engine.pool.block_bytes)
     finished = engine.run_until_drained()
     dt = time.time() - t0
     stats = engine.stats()

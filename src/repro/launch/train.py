@@ -47,7 +47,7 @@ def main() -> None:
     from ..configs import get_config
     from ..configs.dynims import host_cache_params
     from ..core import GiB
-    from ..core.controller import ControlPlane
+    from ..core.plane import MemoryPlane, PlaneSpec
     from ..data import DataPipeline, PipelineConfig, ShardStore, write_corpus
     from ..models import Model
     from ..train import Trainer, TrainerConfig, TrainStepConfig
@@ -65,7 +65,7 @@ def main() -> None:
                      tokens_per_shard=max(args.seq_len * 16, 4096),
                      vocab_size=cfg.vocab_size, seed=args.seed)
 
-    plane = ControlPlane(host_cache_params(64 * GiB))
+    plane = MemoryPlane(PlaneSpec(params=host_cache_params(64 * GiB)))
     pipe = DataPipeline(
         ShardStore(data_dir),
         PipelineConfig(batch_size=args.batch_size, seq_len=args.seq_len,

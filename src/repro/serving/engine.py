@@ -4,10 +4,12 @@ The paper's architecture in the serving path: HBM is the contended
 resource; the *compute tenant* is the model's weights + activation
 working set, the *storage tenant* is the KV cache.  The
 :class:`~repro.core.store.KVBlockPool` bookkeeps block grants; a
-:class:`~repro.core.controller.ControlPlane` (device monitor ->
-controller) resizes the pool each interval, and a shrink preempts whole
-sequences, which the engine transparently requeues (their progress is
-kept: tokens generated so far become part of the prompt on re-admission).
+:class:`~repro.core.plane.MemoryPlane` (device monitor -> controller)
+resizes the pool each interval, and a shrink preempts whole sequences,
+which the engine transparently requeues (their progress is kept: tokens
+generated so far become part of the prompt on re-admission).  The
+engine declares its pool to the plane at construction and ticks it once
+per decode step; all bus/controller wiring stays inside the plane.
 
 Mechanics:
 
@@ -31,8 +33,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.controller import ControlPlane
-from ..core.store import KVBlockPool, StoreRegistry
+from ..core.monitor import DeviceMemoryMonitor, MemoryMonitor
+from ..core.plane import MemoryPlane, StoreSpec
+from ..core.store import KVBlockPool
 from ..models import decode as D
 from ..models.transformer import Model
 
@@ -77,7 +80,10 @@ class _Slot:
 class ServingEngine:
     def __init__(self, model: Model, params, cfg: ServingConfig,
                  pool: Optional[KVBlockPool] = None,
-                 plane: Optional[ControlPlane] = None, jit: bool = True):
+                 plane: Optional[MemoryPlane] = None,
+                 node: str = "serve0",
+                 monitor: Optional[MemoryMonitor] = None,
+                 jit: bool = True):
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -85,12 +91,17 @@ class ServingEngine:
         n_blocks = cfg.max_batch * (cfg.max_len // cfg.block_tokens)
         self.pool = pool or KVBlockPool("kv-pool", n_blocks, kv_bytes)
         self.plane = plane
+        self.node = node
         if plane is not None:
-            reg = StoreRegistry()
-            reg.register(self.pool, max_bytes=self.pool.total_blocks
-                         * self.pool.block_bytes)
-            from ..core.monitor import SimulatedMonitor
-            # In production this is a DeviceMemoryMonitor on each chip.
+            # Declare the pool to the plane: per-chip HBM monitor unless
+            # the caller supplies one (tests use a SimulatedMonitor).
+            monitor = monitor or DeviceMemoryMonitor(
+                jax.devices()[0], node=node,
+                storage_used_fn=self.pool.used)
+            plane.attach(
+                node, monitor,
+                stores=(StoreSpec(self.pool, self.pool.total_blocks
+                                  * self.pool.block_bytes),))
         self.queue: List[Request] = []
         self.finished: Dict[int, Request] = {}
         self.slots = [_Slot() for _ in range(cfg.max_batch)]
@@ -138,6 +149,10 @@ class ServingEngine:
         self._admit()
         active = [i for i, s in enumerate(self.slots) if not s.free]
         if not active:
+            # Still tick the plane: a fully-preempted engine depends on
+            # the controller re-granting pool capacity to admit again.
+            if self.plane is not None:
+                self.plane.tick()
             return
         tokens, feeding = self._next_tokens()
         logits, self.state = self._step(self.params, self.state,

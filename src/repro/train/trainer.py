@@ -4,8 +4,8 @@ One object wires the whole stack the way a pod deployment would:
 
 * data: :class:`~repro.data.pipeline.DataPipeline` whose host shard
   cache is DynIMS-managed (the paper's contribution in the input path),
-* control: one :class:`~repro.core.controller.ControlPlane` ticked from
-  the step loop (production runs it on its own thread at T=100 ms; the
+* control: one :class:`~repro.core.plane.MemoryPlane` ticked from the
+  step loop (production runs it on its own thread at T=100 ms; the
   step-synchronous tick keeps tests deterministic),
 * checkpointing: :class:`~repro.checkpoint.CheckpointManager`, restart
   via ``resume()`` -- the pipeline is sampled by step number, so restore
@@ -25,7 +25,7 @@ import numpy as np
 
 from ..checkpoint import CheckpointManager
 from ..configs.dynims import host_cache_params
-from ..core.controller import ControlPlane
+from ..core.plane import MemoryPlane
 from ..data.pipeline import DataPipeline
 from ..models.transformer import Model
 from ..runtime.fault import HeartbeatMonitor
@@ -47,7 +47,7 @@ class TrainerConfig:
 class Trainer:
     def __init__(self, model: Model, pipeline: DataPipeline,
                  step_cfg: TrainStepConfig, cfg: TrainerConfig,
-                 plane: Optional[ControlPlane] = None,
+                 plane: Optional[MemoryPlane] = None,
                  jit: bool = True):
         self.model = model
         self.pipeline = pipeline
@@ -69,9 +69,7 @@ class Trainer:
         """Straggler mitigation step 1: shrink that worker's cache."""
         self._squeezed[worker] = factor
         if self.plane is not None:
-            node = self.plane.controller._nodes.get(worker)
-            if node is not None:
-                node.registry.apply_capacity(node.u * factor)
+            self.plane.squeeze(worker, factor)
 
     # ---- main loop ------------------------------------------------------------
     def fit(self, params, state: Optional[TrainState] = None,

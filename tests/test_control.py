@@ -1,8 +1,11 @@
 """Control-law unit + property tests (paper Eq. 1, Table I)."""
 
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import (ControllerParams, GiB, closed_loop_eigenvalue,

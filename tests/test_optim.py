@@ -4,8 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 import hypothesis.strategies as st
+from hypothesis import given, settings
 
 from repro.optim import (adamw_init, adamw_update, compress_decompress,
                          compression_init, int8_dequantize, int8_quantize,

@@ -1,10 +1,15 @@
-"""Monitoring plane: bus, aggregator, controller end-to-end."""
+"""Monitoring/control plane: bus, aggregator, MemoryPlane end-to-end,
+scalar vs array backend parity, lifecycle, and the legacy shim."""
+
+import time
 
 import numpy as np
+import pytest
 
-from repro.core import (AGG_TOPIC, RAW_TOPIC, ControlPlane, GiB,
-                        MemorySample, MessageBus, MetricAggregator,
-                        ShardCache, SimulatedMonitor, StoreRegistry)
+from repro.core import (AGG_TOPIC, RAW_TOPIC, ControlPlane, ControllerParams,
+                        GiB, MemoryPlane, MemorySample, MessageBus,
+                        MetricAggregator, NodeSpec, PlaneSpec, ShardCache,
+                        Signal, SimulatedMonitor, StoreRegistry, StoreSpec)
 from repro.core.cluster_sim import paper_controller_params
 
 
@@ -96,3 +101,245 @@ def test_control_actions_published():
     actions = plane.bus.poll(CONTROL_TOPIC, group="test")
     assert len(actions) == 5
     assert all(a.node == "n0" for a in actions)
+
+
+# ---------------------------------------------------------------------------
+# MemoryPlane: declarative API, backends, lifecycle
+# ---------------------------------------------------------------------------
+
+def test_signal_enum_coercion():
+    assert Signal.coerce("latest") is Signal.LATEST
+    assert Signal.coerce(Signal.EWMA) is Signal.EWMA
+    with pytest.raises(ValueError):
+        Signal.coerce("p99")
+    with pytest.raises(ValueError):
+        PlaneSpec(params=paper_controller_params(), signal="bogus")
+
+
+def test_plane_spec_rejects_unknown_backend():
+    with pytest.raises(ValueError):
+        PlaneSpec(params=paper_controller_params(), backend="quantum")
+
+
+def test_memory_plane_array_backend_closed_loop():
+    """The fused array backend drives a real cache through the paper's
+    burst/shrink/recover scenario, same as the scalar reference."""
+    cache = ShardCache(capacity=60 * GiB, sizeof=lambda v: v.nbytes)
+    for i in range(60):
+        cache.put(i, Blob(1 * GiB))
+    usage = ([20 * GiB] * 10) + ([95 * GiB] * 20) + ([20 * GiB] * 40)
+    plane = MemoryPlane(PlaneSpec(
+        params=paper_controller_params(),
+        backend="array",
+        nodes=(NodeSpec(
+            "n0",
+            monitor=SimulatedMonitor("n0", total=125 * GiB, usage=usage,
+                                     storage_used_fn=cache.used),
+            stores=(StoreSpec(cache, max_bytes=60 * GiB),),
+            u0=60 * GiB),),
+    ))
+    caps = []
+    for _ in range(len(usage)):
+        actions = plane.tick()
+        assert len(actions) == 1
+        caps.append(cache.capacity() / GiB)
+    assert min(caps[10:30]) < 30          # shrunk during the burst
+    assert caps[-1] > 55                  # recovered to u_max
+    assert cache.used() <= cache.capacity()
+    assert cache.stats.evictions >= 25
+    assert plane.capacity("n0") == pytest.approx(caps[-1] * GiB, rel=1e-6)
+
+
+def _heterogeneous_fleet(backend, base, M, u_min, u_max, u0, demand):
+    """One plane with per-node capacity overrides and trace monitors."""
+    n = len(M)
+    nodes = tuple(
+        NodeSpec(
+            f"n{i}",
+            monitor=SimulatedMonitor(f"n{i}", total=M[i], usage=demand[i]),
+            registry=StoreRegistry(),
+            u0=u0[i],
+            params=base.replace(total_memory=M[i], u_min=u_min[i],
+                                u_max=u_max[i]))
+        for i in range(n))
+    return MemoryPlane(PlaneSpec(params=base, backend=backend, nodes=nodes))
+
+
+@pytest.mark.parametrize("variant", ["paper", "extended"])
+def test_array_scalar_parity_256_heterogeneous_nodes(variant):
+    """Acceptance: ArrayController matches the scalar reference within
+    1e-4 relative tolerance across a mixed fleet (mixed M, u_min/u_max,
+    feedforward/deadband both off and on)."""
+    rng = np.random.default_rng(42)
+    n, t = 256, 30
+    M = rng.uniform(64, 256, n) * GiB
+    u_max = rng.uniform(20, 60, n) * GiB
+    u_min = rng.uniform(0, 5, n) * GiB
+    u0 = rng.uniform(u_min, u_max)
+    base = ControllerParams(total_memory=125 * GiB)
+    if variant == "paper":
+        demand = rng.uniform(0.5, 1.05, (n, t)) * M[:, None]
+    else:
+        base = base.replace(feedforward=0.5, deadband=0.015, lam_grant=0.25)
+        # piecewise-constant demand on a coarse utilization grid keeps
+        # float32-vs-float64 rounding away from the deadband boundary
+        offsets = np.array([-0.25, -0.10, -0.04, 0.02, 0.06, 0.12])
+        levels = rng.choice(offsets, size=(n, t // 5 + 1))
+        demand = (base.r0 + np.repeat(levels, 5, axis=1)[:, :t]) * M[:, None]
+    planes = {b: _heterogeneous_fleet(b, base, M, u_min, u_max, u0, demand)
+              for b in ("scalar", "array")}
+    for _ in range(t):
+        for plane in planes.values():
+            plane.tick()
+    ref = np.array([planes["scalar"].capacity(f"n{i}") for i in range(n)])
+    got = np.array([planes["array"].capacity(f"n{i}") for i in range(n)])
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e4)
+
+
+def test_memory_plane_lifecycle_restart():
+    """attach -> tick -> start -> stop -> re-start: the plane is
+    restartable and keeps collecting actions."""
+    params = paper_controller_params(interval_s=0.01)
+    plane = MemoryPlane(PlaneSpec(params=params, backend="array"))
+    plane.attach("n0",
+                 SimulatedMonitor("n0", total=125 * GiB,
+                                  usage=lambda i: 80 * GiB),
+                 registry=StoreRegistry(), u0=30 * GiB)
+    assert plane.nodes() == ["n0"]
+    assert len(plane.tick()) == 1
+    assert not plane.running
+
+    plane.start()
+    assert plane.running
+    time.sleep(0.15)
+    plane.stop()
+    assert not plane.running
+    n1 = len(plane.actions())
+    assert n1 > 1
+
+    plane.start()                      # restart after stop
+    time.sleep(0.15)
+    plane.stop()
+    assert len(plane.actions()) > n1
+
+    with plane:                        # context-manager lifecycle
+        assert plane.running
+        time.sleep(0.05)
+    assert not plane.running
+
+
+def test_action_history_is_bounded():
+    plane = MemoryPlane(PlaneSpec(
+        params=paper_controller_params(), backend="array", history=8,
+        nodes=(NodeSpec("n0",
+                        monitor=SimulatedMonitor(
+                            "n0", total=125 * GiB,
+                            usage=lambda i: 100 * GiB),
+                        registry=StoreRegistry(), u0=30 * GiB),)))
+    for _ in range(40):
+        plane.tick()
+    assert len(plane.actions()) == 8
+    assert len(plane.actions(limit=3)) == 3
+    # scalar backend honors the same bound
+    shim = ControlPlane(paper_controller_params(), max_history=8)
+    shim.attach("n0", SimulatedMonitor("n0", total=125 * GiB,
+                                       usage=lambda i: 100 * GiB),
+                StoreRegistry(), u0=30 * GiB)
+    for _ in range(40):
+        shim.tick()
+    assert len(shim.controller.actions) == 8
+
+
+def test_squeeze_clamps_without_moving_control_state():
+    cache = ShardCache(capacity=40 * GiB, sizeof=lambda v: v.nbytes)
+    for i in range(40):
+        cache.put(i, Blob(1 * GiB))
+    plane = MemoryPlane(PlaneSpec(
+        params=paper_controller_params(), backend="array",
+        nodes=(NodeSpec("n0",
+                        monitor=SimulatedMonitor(
+                            "n0", total=125 * GiB,
+                            usage=lambda i: 40 * GiB,
+                            storage_used_fn=cache.used),
+                        stores=(StoreSpec(cache, 60 * GiB),),
+                        u0=40 * GiB),)))
+    assert plane.squeeze("n0", 0.25)
+    assert cache.capacity() == pytest.approx(10 * GiB)
+    assert plane.capacity("n0") == pytest.approx(40 * GiB)   # u untouched
+    plane.tick()                       # law re-grants from slack
+    assert cache.capacity() > 10 * GiB
+    assert not plane.squeeze("ghost", 0.5)
+
+
+def test_per_node_gain_override_rejected_on_array_backend():
+    from repro.core import ArrayController
+    base = paper_controller_params()
+    ac = ArrayController(base)
+    with pytest.raises(ValueError):
+        ac.attach_node("n0", StoreRegistry(), u0=0.0,
+                       params=base.replace(lam=1.5))
+    ac.attach_node("n1", StoreRegistry(), u0=0.0,
+                   params=base.replace(u_max=10 * GiB))   # capacities ok
+
+
+def test_control_plane_shim_is_deprecated_memory_plane():
+    with pytest.warns(DeprecationWarning):
+        shim = ControlPlane(paper_controller_params())
+    assert isinstance(shim, MemoryPlane)
+    from repro.core.controller import ControlPlane as legacy_path
+    assert legacy_path is ControlPlane
+
+
+def test_scalar_tick_returns_full_fleet_despite_small_history():
+    """tick() must return every node's action even when the retained
+    history bound is smaller than the fleet (both backends)."""
+    for backend in ("scalar", "array"):
+        plane = MemoryPlane(PlaneSpec(
+            params=paper_controller_params(), backend=backend, history=4,
+            nodes=tuple(
+                NodeSpec(f"n{i}",
+                         monitor=SimulatedMonitor(
+                             f"n{i}", total=125 * GiB,
+                             usage=lambda t: 90 * GiB),
+                         registry=StoreRegistry(), u0=30 * GiB)
+                for i in range(12))))
+        actions = plane.tick()
+        assert len(actions) == 12, backend
+        assert len(plane.actions()) == 4          # retained log stays bounded
+
+
+def test_attach_rejects_registry_and_stores_together():
+    plane = MemoryPlane(PlaneSpec(params=paper_controller_params()))
+    cache = ShardCache(capacity=1 * GiB)
+    with pytest.raises(ValueError):
+        plane.attach("n0",
+                     SimulatedMonitor("n0", total=125 * GiB,
+                                      usage=lambda i: 50 * GiB),
+                     registry=StoreRegistry(),
+                     stores=(StoreSpec(cache, 1 * GiB),))
+
+
+def test_idle_engine_still_ticks_plane():
+    """A fully-idle (e.g. fully-preempted) serving engine must keep
+    ticking its plane or a reclaimed pool can never be re-granted."""
+    import repro.serving.engine as E
+
+    class _Plane:
+        ticks = 0
+        def attach(self, *a, **k):
+            return StoreRegistry()
+        def tick(self):
+            self.ticks += 1
+            return []
+
+    eng = E.ServingEngine.__new__(E.ServingEngine)
+    eng.steps = 0
+    eng.plane = _Plane()
+    eng.queue = []
+    eng.finished = {}
+    eng.slots = [E._Slot()]
+    eng.pool = type("P", (), {"drain_preempted": staticmethod(lambda: []),
+                              "num_free_blocks": staticmethod(lambda: 0)})()
+    eng.cfg = E.ServingConfig(max_batch=1)
+    eng.step()
+    assert eng.plane.ticks == 1

@@ -2,8 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 import hypothesis.strategies as st
+from hypothesis import given, settings
 
 from repro.core import (KVBlockPool, LFUPolicy, LRUPolicy, ShardCache,
                         StoreRegistry, make_policy)
