@@ -1,0 +1,111 @@
+"""ScenarioLab sweep-engine benchmark vs the Python-loop fleet sim.
+
+Times the same fleet-scale closed loop (phase-shifted HPCC demand,
+paper Table I gains) three ways:
+
+* ``python_loop``  -- ``simulate_fleet(engine="python")``: one fused
+  jitted step per interval, re-entering Python T times.
+* ``lab_scan``     -- ``simulate_fleet(engine="lab")``: the whole
+  horizon as one jitted ``lax.scan`` (single dispatch).
+* ``lab_sweep_G``  -- the lab engine amortized over a G-point gain
+  grid ``vmap``'d through the same scan.
+
+The figure of merit is **node*interval*config closed-loop updates per
+second**.  Writes ``BENCH_lab.json`` at the repo root and prints a
+table.  Usage:
+
+    PYTHONPATH=src python benchmarks/lab_bench.py [--nodes 4096]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+REPEATS = 3
+
+
+def _best(fn) -> float:
+    """Best-of-N wall time, after a warmup call that pays compilation."""
+    fn()
+    times = []
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return min(times)
+
+
+def bench(n_nodes: int, n_intervals: int, n_configs: int,
+          seed: int = 0) -> list:
+    from repro.core.cluster_sim import paper_controller_params, simulate_fleet
+    from repro.core.traces import fleet_demand_traces
+    from repro.lab import GainSet, grid_gains, sweep_demand
+
+    p = paper_controller_params()
+    rows = []
+
+    def timed(name, configs, fn):
+        elapsed = _best(fn)
+        work = n_nodes * n_intervals * configs
+        rows.append({
+            "engine": name,
+            "n_nodes": n_nodes,
+            "n_intervals": n_intervals,
+            "n_configs": configs,
+            "elapsed_s": elapsed,
+            "throughput_upd_per_s": work / elapsed,
+        })
+
+    timed("python_loop", 1,
+          lambda: simulate_fleet(n_nodes, n_intervals, seed=seed,
+                                 engine="python"))
+    timed("lab_scan", 1,
+          lambda: simulate_fleet(n_nodes, n_intervals, seed=seed,
+                                 engine="lab"))
+
+    # The sweep amortizes demand compilation across the grid: time only
+    # the engine, as a tuner (which builds demand once) experiences it.
+    demand = fleet_demand_traces(n_nodes, n_intervals, p.interval_s,
+                                 seed=seed)
+    k = max(int(np.sqrt(n_configs)), 2)
+    gains = grid_gains(p, lam=np.linspace(0.1, 1.8, k),
+                       r0=np.linspace(0.88, 0.98, k))
+    timed(f"lab_sweep_{len(gains)}", len(gains),
+          lambda: sweep_demand(demand, gains, node_memory=p.total_memory,
+                               interval_s=p.interval_s))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    default_out = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_lab.json")
+    ap.add_argument("--out", default=default_out)
+    ap.add_argument("--nodes", type=int, default=4096)
+    ap.add_argument("--intervals", type=int, default=1000)
+    ap.add_argument("--configs", type=int, default=64)
+    args = ap.parse_args()
+
+    rows = bench(args.nodes, args.intervals, args.configs)
+    base = rows[0]["throughput_upd_per_s"]
+    for r in rows:
+        r["speedup_vs_python_loop"] = r["throughput_upd_per_s"] / base
+    with open(args.out, "w") as fh:
+        json.dump({"sweep_throughput": rows}, fh, indent=2)
+
+    print(f"{'engine':>14} {'configs':>7} {'elapsed':>9} "
+          f"{'node*intv*cfg/s':>16} {'speedup':>8}")
+    for r in rows:
+        print(f"{r['engine']:>14} {r['n_configs']:7d} "
+              f"{r['elapsed_s']:8.3f}s {r['throughput_upd_per_s']:16.3e} "
+              f"{r['speedup_vs_python_loop']:7.1f}x")
+    print(f"\nwrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,19 +1,77 @@
 """Benchmark harness: one entry per paper table/figure + roofline.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
-Prints `name,us_per_call,derived` CSV plus per-figure headlines.
+Usage: PYTHONPATH=src python -m benchmarks.run [--only PAT]
+       PYTHONPATH=src python -m benchmarks.run --artifacts-only
+
+Prints `name,us_per_call,derived` CSV plus per-figure headlines, then a
+summary of every checked-in ``BENCH_*.json`` artifact (written by
+``controller_bench.py``, ``lab_bench.py``, ...) so one invocation shows
+the repo's full performance picture.
 """
 
 from __future__ import annotations
 
 import argparse
+import glob
+import json
+import os
 import sys
+
+
+def aggregate_artifacts(root: str) -> None:
+    """One summary table per ``BENCH_*.json`` table found under root.
+
+    Artifacts are ``{section_name: [row_dict, ...], ...}``; every
+    list-of-dicts value renders as an aligned table keyed by the union
+    of its row fields, so new benchmarks join the summary by just
+    writing a ``BENCH_<name>.json``.
+    """
+    paths = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+    if not paths:
+        print("# no BENCH_*.json artifacts found")
+        return
+    print("\n# ---- checked-in benchmark artifacts ----")
+    for path in paths:
+        try:
+            with open(path) as fh:
+                doc = json.load(fh)
+        except (OSError, ValueError) as e:
+            print(f"# {os.path.basename(path)}: unreadable ({e!r})")
+            continue
+        for section, rows in sorted(doc.items()):
+            if not (isinstance(rows, list)
+                    and all(isinstance(r, dict) for r in rows) and rows):
+                continue
+            cols = []
+            for r in rows:
+                cols.extend(k for k in r if k not in cols)
+            widths = {c: max(len(c), *(len(_fmt(r.get(c))) for r in rows))
+                      for c in cols}
+            print(f"\n## {os.path.basename(path)} :: {section}")
+            print("  ".join(c.rjust(widths[c]) for c in cols))
+            for r in rows:
+                print("  ".join(_fmt(r.get(c)).rjust(widths[c])
+                                for c in cols))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return "" if v is None else str(v)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--artifacts-only", action="store_true",
+                    help="skip the live micro-benches; just summarize "
+                         "BENCH_*.json artifacts")
     args = ap.parse_args()
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if args.artifacts_only:
+        aggregate_artifacts(root)
+        return
 
     from . import kernel_bench, paper_figures
     from .roofline_table import roofline_summary
@@ -50,6 +108,7 @@ def main() -> None:
     print()
     for k, h in headlines:
         print(f"# {k}: {h}")
+    aggregate_artifacts(root)
 
 
 if __name__ == "__main__":

@@ -8,6 +8,8 @@ those tiers live here so every trainer/server instantiates identically.
 
 from __future__ import annotations
 
+from typing import Dict, List
+
 from ..core.control import ControllerParams, GiB
 
 # The paper's exact Table I configuration.
@@ -19,6 +21,53 @@ PAPER_TABLE_I = ControllerParams(
     u_max=60.0 * GiB,
     interval_s=0.1,
 )
+
+
+# ScenarioLab-tuned gains per named scenario (see ``repro.lab``): the
+# argmax of a 10x10 lam x r0 grid sweep under ``lab.score.default_score``
+# at seed 0.  Regenerate with ``examples/tune_gains.py --all``.  The
+# common shape -- gains well above the paper's 0.5 -- is the lab's first
+# finding: under recurring bursts, reclaim speed buys more than the
+# smoothness Table I optimizes for.
+LAB_TUNED: Dict[str, ControllerParams] = {
+    # KV-admission waves: track bursts tightly with a near-critical gain.
+    "bursty-serving": PAPER_TABLE_I.replace(r0=0.9578, lam=1.8),
+    # Demand bursts past M: concede headroom (low r0), reclaim fast.
+    "swap-storm": PAPER_TABLE_I.replace(r0=0.8911, lam=1.0444),
+    # Mixed hardware: paper r0 but ~3x the paper gain.
+    "hetero-fleet": PAPER_TABLE_I.replace(r0=0.9578, lam=1.4222),
+    # Crash/restart churn: grant aggressively into freed memory.
+    "failover-churn": PAPER_TABLE_I.replace(r0=0.98, lam=1.0444),
+}
+
+
+# The registry names of the paper's Sec. IV.A scenarios (repro.lab
+# registers them; kept literal here so configs does not import the lab).
+PAPER_SCENARIOS = ("paper-c1-spark45", "paper-c2-static25",
+                   "paper-c3-dynims60", "paper-c4-nohpcc")
+
+
+def tuned_params(scenario: str, **overrides) -> ControllerParams:
+    """The checked-in ScenarioLab preset for a named scenario.
+
+    The paper's own scenarios resolve to Table I itself; unknown names
+    (including misspelled ``paper-*`` ones) raise with the choices.
+    """
+    if scenario in PAPER_SCENARIOS:
+        base = PAPER_TABLE_I
+    else:
+        try:
+            base = LAB_TUNED[scenario]
+        except KeyError:
+            known = ", ".join(sorted(LAB_TUNED) + list(PAPER_SCENARIOS))
+            raise KeyError(
+                f"no tuned preset for {scenario!r} (have: {known}); run "
+                "repro.lab.tune_gains to derive one") from None
+    return base.replace(**overrides) if overrides else base
+
+
+def tuned_scenarios() -> List[str]:
+    return sorted(LAB_TUNED)
 
 
 def host_cache_params(total_host_ram: float, *, u_max_frac: float = 0.5,

@@ -452,42 +452,68 @@ def run_paper_experiment(app: Optional[IterativeAppSpec] = None,
 
 def simulate_fleet(n_nodes: int = 4096, n_intervals: int = 1000,
                    seed: int = 0,
-                   params: Optional[ControllerParams] = None) -> dict:
+                   params: Optional[ControllerParams] = None,
+                   engine: str = "lab") -> dict:
     """Vectorized closed-loop sim of ``n_nodes`` controllers in JAX.
 
-    Each node gets a phase-shifted, amplitude-jittered HPCC trace; the
-    whole fleet's Eq. 1 updates run as one fused jit step per interval
-    (this is the shape of a centralized controller for a 1000+-node
-    deployment: one vector op per 100 ms tick).  Returns stability
-    metrics the fleet-scale test asserts on.
+    Each node gets a phase-shifted, amplitude-jittered HPCC trace
+    (:func:`~repro.core.traces.fleet_demand_traces`) and the whole
+    fleet's Eq. 1 updates run batched.  Two engines:
+
+    * ``engine="lab"`` (default) -- delegate to the ScenarioLab sweep:
+      the entire horizon is one jitted ``lax.scan``, so the closed loop
+      costs a single XLA dispatch end to end.
+    * ``engine="python"`` -- the historical loop: one fused jitted step
+      per interval, re-entering Python 10x per simulated second.  Kept
+      as the baseline ``benchmarks/lab_bench.py`` measures against;
+      a parity test pins both engines' metrics together.
+
+    Returns stability metrics the fleet-scale test asserts on.
     """
+    from .traces import fleet_demand_traces
+
+    p = params or paper_controller_params()
+    demand = fleet_demand_traces(n_nodes, n_intervals, p.interval_s,
+                                 seed=seed)
+
+    if engine == "lab":
+        from ..lab.score import stats_to_dict
+        from ..lab.sweep import GainSet, sweep_demand
+        stats = sweep_demand(
+            demand, GainSet.from_params(p), node_memory=p.total_memory,
+            interval_s=p.interval_s)
+        out = stats_to_dict(stats, 0)
+        out["n_nodes"] = n_nodes
+        return out
+    if engine != "python":
+        raise ValueError("engine must be lab|python")
+
     import jax
     import jax.numpy as jnp
 
     from .control import vectorized_step
 
-    p = params or paper_controller_params()
-    rng = np.random.default_rng(seed)
-    base = hpcc_trace(float(n_intervals) * p.interval_s, p.interval_s,
-                      seed=seed)
-    shifts = rng.integers(0, len(base), size=n_nodes)
-    amp = rng.uniform(0.8, 1.2, size=n_nodes)
-    demand = np.stack([np.roll(base, s) * a for s, a in zip(shifts, amp)])
-    demand = demand[:, :n_intervals]                    # (N, T)
-
     m = p.total_memory
     u = jnp.full((n_nodes,), p.u_max, dtype=jnp.float32)
+    # First interval runs without a previous observation: seeding v_prev
+    # with that interval's own usage zeroes the slope term exactly (the
+    # lab engine uses the same convention, keeping the engines in parity
+    # for feedforward params too).
+    v_prev = jnp.asarray(demand[:, 0], jnp.float32) + u
 
     @jax.jit
-    def step(u, d):
+    def step(u, v_prev, d):
         v = d + u                                        # saturated store
         u_next = vectorized_step(u, v, total_memory=m, r0=p.r0, lam=p.lam,
-                                 u_min=p.u_min, u_max=p.u_max)
-        return u_next, (v / m, u_next)
+                                 u_min=p.u_min, u_max=p.u_max,
+                                 lam_grant=p.lam_grant, deadband=p.deadband,
+                                 v_prev=v_prev, feedforward=p.feedforward)
+        return u_next, (v / m, u_next, v)
 
     utils, caps = [], []
     for i in range(n_intervals):
-        u, (r, u_now) = step(u, jnp.asarray(demand[:, i], jnp.float32))
+        u, (r, u_now, v_prev) = step(u, v_prev,
+                                     jnp.asarray(demand[:, i], jnp.float32))
         utils.append(r)
         caps.append(u_now)
     utils = np.stack([np.asarray(x) for x in utils])     # (T, N)

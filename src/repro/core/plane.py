@@ -365,6 +365,24 @@ class MemoryPlane:
         for node_spec in spec.nodes:
             self._attach_spec(node_spec)
 
+    @classmethod
+    def for_scenario(cls, scenario: str, *,
+                     nodes: Iterable[NodeSpec] = (),
+                     **spec_kw) -> "MemoryPlane":
+        """A plane running the ScenarioLab-tuned gains for ``scenario``.
+
+        Looks the named scenario up in the checked-in preset registry
+        (``repro.configs.dynims.tuned_params``; ``paper-*`` names map
+        to Table I) and builds a :class:`PlaneSpec` around it --
+        remaining keywords pass through to the spec::
+
+            plane = MemoryPlane.for_scenario("bursty-serving",
+                                             nodes=(NodeSpec(...),))
+        """
+        from ..configs.dynims import tuned_params
+        return cls(PlaneSpec(params=tuned_params(scenario),
+                             nodes=tuple(nodes), **spec_kw))
+
     # -- wiring -------------------------------------------------------------
     def _attach_spec(self, ns: NodeSpec) -> StoreRegistry:
         return self.attach(ns.name, ns.monitor, ns.registry,

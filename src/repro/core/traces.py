@@ -97,6 +97,76 @@ def constant_trace(duration_s: float, interval_s: float,
     return np.full(n, usage_gib * GiB)
 
 
+def fleet_demand_traces(
+    n_nodes: int,
+    n_intervals: int,
+    interval_s: float = 0.1,
+    seed: int = 0,
+    amp_range: Tuple[float, float] = (0.8, 1.2),
+    phase_shift: bool = True,
+    base: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Batched multi-node demand: ``(n_nodes, n_intervals)`` in bytes.
+
+    Every node replays the same base trace (Fig.-1-shaped HPCC by
+    default) phase-shifted by a random offset and amplitude-jittered
+    within ``amp_range`` -- the fleet-scale workload model
+    :func:`~repro.core.cluster_sim.simulate_fleet` and the ScenarioLab
+    sweep engine share.  Deterministic given ``seed``; the RNG draw
+    order (base trace, then shifts, then amplitudes) is part of the
+    contract so both consumers see identical fleets.
+    """
+    rng = np.random.default_rng(seed)
+    if base is None:
+        base = hpcc_trace(float(n_intervals) * interval_s, interval_s,
+                          seed=seed)
+    base = np.asarray(base, dtype=np.float64)
+    if phase_shift:
+        shifts = rng.integers(0, len(base), size=n_nodes)
+    else:
+        shifts = np.zeros(n_nodes, dtype=np.int64)
+    amp = rng.uniform(amp_range[0], amp_range[1], size=n_nodes)
+    demand = np.stack([np.roll(base, s) * a for s, a in zip(shifts, amp)])
+    if demand.shape[1] < n_intervals:
+        reps = -(-n_intervals // demand.shape[1])
+        demand = np.tile(demand, (1, reps))
+    return demand[:, :n_intervals]
+
+
+def bursty_trace(
+    n_intervals: int,
+    interval_s: float = 0.1,
+    base_gib: float = 40.0,
+    burst_gib: float = 40.0,
+    burst_every_s: float = 20.0,
+    burst_len_s: float = 2.0,
+    ramp_s: float = 0.5,
+    noise_gib: float = 0.5,
+    seed: int = 0,
+) -> np.ndarray:
+    """Periodic load spikes over a plateau (bytes).
+
+    Models bursty serving pressure (KV-cache admission waves): every
+    ``burst_every_s`` the demand ramps from ``base_gib`` up to
+    ``base_gib + burst_gib`` over ``ramp_s`` seconds, holds for
+    ``burst_len_s``, and ramps back down.
+    """
+    rng = np.random.default_rng(seed)
+    out = np.full(n_intervals, base_gib, dtype=np.float64)
+    period = max(int(round(burst_every_s / interval_s)), 1)
+    blen = max(int(round(burst_len_s / interval_s)), 1)
+    ramp = max(int(round(ramp_s / interval_s)), 1)
+    for start in range(period // 2, n_intervals, period):
+        up = np.linspace(base_gib, base_gib + burst_gib, ramp)
+        hold = np.full(blen, base_gib + burst_gib)
+        down = np.linspace(base_gib + burst_gib, base_gib, ramp)
+        prof = np.concatenate([up, hold, down])
+        end = min(start + len(prof), n_intervals)
+        out[start:end] = prof[: end - start]
+    out += rng.normal(0.0, noise_gib, size=n_intervals)
+    return np.clip(out, 0.5, None) * GiB
+
+
 def hpl_slowdown(utilization: float, swap_frac: float = 0.0) -> float:
     """Relative HPL execution-time multiplier at a memory utilization.
 

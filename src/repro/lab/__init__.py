@@ -1,0 +1,37 @@
+"""ScenarioLab: vectorized scenario sweeps and gain autotuning.
+
+The lab exploits the batched control law (PR 1's ``vectorized_step``)
+to run *populations* of closed-loop simulations as one compiled
+program:
+
+* :mod:`.scenarios` -- declarative :class:`ScenarioSpec` (trace family,
+  fleet size, heterogeneity, burst/failure injection) + a registry of
+  named scenarios (the paper's Sec. IV.A configs and beyond-paper
+  stress shapes).
+* :mod:`.sweep`     -- the engine: demand compiled to ``(N, T)``, the
+  loop run as one jitted ``lax.scan`` over time, ``vmap``'d over a
+  :class:`GainSet` gain grid.
+* :mod:`.score`     -- Figs. 5-8 analogue metrics (:class:`FleetStats`)
+  and scalar objectives, pure functions of sweep output.
+* :mod:`.tune`      -- grid/random gain search returning a tuned
+  :class:`~repro.core.control.ControllerParams`.
+
+Tuned presets surface through ``repro.configs.dynims.tuned_params`` and
+``MemoryPlane.for_scenario``.
+"""
+
+from .scenarios import (ScenarioSpec, TRACE_FAMILIES, get_scenario,
+                        list_scenarios, register_scenario)
+from .score import (FleetStats, OVER_R0_EPS, SETTLE_TOL, compute_fleet_stats,
+                    default_score, stats_to_dict)
+from .sweep import (DEFAULT_CHUNK, GainSet, SweepResult, run_sweep,
+                    sweep_demand)
+from .tune import TuneResult, grid_gains, random_gains, tune_gains
+
+__all__ = [
+    "DEFAULT_CHUNK", "FleetStats", "GainSet", "OVER_R0_EPS", "SETTLE_TOL",
+    "ScenarioSpec", "SweepResult", "TRACE_FAMILIES", "TuneResult",
+    "compute_fleet_stats", "default_score", "get_scenario", "grid_gains",
+    "list_scenarios", "random_gains", "register_scenario", "run_sweep",
+    "stats_to_dict", "sweep_demand", "tune_gains",
+]

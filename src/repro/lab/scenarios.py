@@ -1,0 +1,236 @@
+"""Declarative closed-loop scenarios for the ScenarioLab sweep engine.
+
+A :class:`ScenarioSpec` names everything the sweep engine needs to
+compile a fleet's compute-tenant demand into a dense ``(N, T)`` array:
+the trace family, fleet size, per-node heterogeneity (amplitude /
+phase / total-memory jitter), and burst / failure injection.  Specs are
+frozen dataclasses, so a scenario is a value: hashable, replayable
+(deterministic given ``seed``), and cheap to :meth:`~ScenarioSpec.replace`
+into variants.
+
+The registry ships the paper's four Sec. IV.A configurations expressed
+as demand scenarios plus beyond-paper stress shapes (bursty serving
+pressure, heterogeneous fleets, swap storms, phase-shifted replay).
+``register_scenario`` admits new ones; ``get_scenario`` accepts either
+a name or a spec everywhere the lab takes a scenario.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple, Union
+
+import numpy as np
+
+from ..core.traces import (GiB, bursty_trace, constant_trace,
+                           fleet_demand_traces, hpcc_trace)
+
+TRACE_FAMILIES = ("hpcc", "constant", "bursty")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One closed-loop experiment, declared as data.
+
+    Demand is the compute tenant's memory usage; the sweep engine adds
+    the (saturated) storage grant on top when it closes the loop.  All
+    ``*_gib`` fields are GiB; compiled traces are bytes.
+
+    Fields:
+      family:          base trace shape -- ``hpcc`` (Fig.-1 replay),
+                       ``constant``, or ``bursty`` (periodic spikes).
+      n_nodes / n_intervals / interval_s: fleet size and horizon.
+      node_memory_gib: per-node budget M (Table I: 125).
+      offset_gib:      static demand floor added to every interval
+                       (Spark executor + OS baseline in the paper
+                       configs).
+      base_gib:        plateau level for constant/bursty families.
+      amp_range:       per-node amplitude jitter (heterogeneous load).
+      phase_shift:     roll each node's trace by a random offset.
+      memory_jitter:   fractional spread of per-node total memory
+                       (0.2 -> M drawn from [0.8, 1.2] * node_memory).
+      burst_gib / burst_every_s / burst_len_s: injected spikes on top
+                       of the family trace (0 burst_gib -> off).
+      failure_rate:    per-node probability of one failure event: the
+                       node's demand collapses to near zero for
+                       ``failure_len_s`` (crash + restart), then
+                       resumes -- exercises the grant path.
+      occupancy:       how full the storage tenant keeps its grant
+                       (paper experiments: hot cache, 1.0).
+    """
+
+    name: str
+    family: str = "hpcc"
+    n_nodes: int = 64
+    n_intervals: int = 600
+    interval_s: float = 0.1
+    node_memory_gib: float = 125.0
+    offset_gib: float = 0.0
+    base_gib: float = 40.0
+    amp_range: Tuple[float, float] = (0.8, 1.2)
+    phase_shift: bool = True
+    memory_jitter: float = 0.0
+    burst_gib: float = 0.0
+    burst_every_s: float = 20.0
+    burst_len_s: float = 2.0
+    failure_rate: float = 0.0
+    failure_len_s: float = 5.0
+    occupancy: float = 1.0
+    description: str = ""
+
+    def __post_init__(self) -> None:
+        if self.family not in TRACE_FAMILIES:
+            raise ValueError(f"family must be one of {TRACE_FAMILIES}")
+        if self.n_nodes < 1 or self.n_intervals < 1:
+            raise ValueError("need n_nodes >= 1 and n_intervals >= 1")
+        if not (0.0 <= self.memory_jitter < 1.0):
+            raise ValueError("memory_jitter must be in [0, 1)")
+        if not (0.0 <= self.failure_rate <= 1.0):
+            raise ValueError("failure_rate must be in [0, 1]")
+        if not (0.0 < self.occupancy <= 1.0):
+            raise ValueError("occupancy must be in (0, 1]")
+
+    def replace(self, **kw) -> "ScenarioSpec":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def duration_s(self) -> float:
+        return self.n_intervals * self.interval_s
+
+    # -- compilation ---------------------------------------------------------
+    def build_demand(self, seed: int = 0) -> np.ndarray:
+        """Compile the per-node demand traces: ``(N, T)`` bytes."""
+        n, t = self.n_nodes, self.n_intervals
+        if self.family == "hpcc":
+            demand = fleet_demand_traces(
+                n, t, self.interval_s, seed=seed, amp_range=self.amp_range,
+                phase_shift=self.phase_shift)
+        elif self.family == "constant":
+            base = constant_trace(self.duration_s, self.interval_s,
+                                  self.base_gib)
+            demand = fleet_demand_traces(
+                n, t, self.interval_s, seed=seed, amp_range=self.amp_range,
+                phase_shift=False, base=base)
+        else:                                              # bursty
+            base = bursty_trace(
+                t, self.interval_s, base_gib=self.base_gib,
+                burst_gib=self.burst_gib,
+                burst_every_s=self.burst_every_s,
+                burst_len_s=self.burst_len_s, seed=seed)
+            demand = fleet_demand_traces(
+                n, t, self.interval_s, seed=seed, amp_range=self.amp_range,
+                phase_shift=self.phase_shift, base=base)
+        if self.burst_gib > 0.0 and self.family != "bursty":
+            demand = demand + self._injected_bursts(seed)
+        if self.failure_rate > 0.0:
+            demand = demand * self._failure_mask(seed)
+        return demand + self.offset_gib * GiB
+
+    def build_node_memory(self, seed: int = 0) -> np.ndarray:
+        """Per-node total memory M: ``(N,)`` bytes."""
+        m = np.full(self.n_nodes, self.node_memory_gib * GiB)
+        if self.memory_jitter > 0.0:
+            rng = np.random.default_rng(seed + 1)
+            m *= rng.uniform(1.0 - self.memory_jitter,
+                             1.0 + self.memory_jitter, size=self.n_nodes)
+        return m
+
+    def _injected_bursts(self, seed: int) -> np.ndarray:
+        rng = np.random.default_rng(seed + 2)
+        n, t = self.n_nodes, self.n_intervals
+        period = max(int(round(self.burst_every_s / self.interval_s)), 1)
+        blen = max(int(round(self.burst_len_s / self.interval_s)), 1)
+        out = np.zeros((n, t))
+        starts = rng.integers(0, period, size=n)          # desynchronized
+        for i in range(n):
+            for s in range(int(starts[i]), t, period):
+                out[i, s:s + blen] = self.burst_gib * GiB
+        return out
+
+    def _failure_mask(self, seed: int) -> np.ndarray:
+        rng = np.random.default_rng(seed + 3)
+        n, t = self.n_nodes, self.n_intervals
+        flen = max(int(round(self.failure_len_s / self.interval_s)), 1)
+        mask = np.ones((n, t))
+        failed = rng.random(n) < self.failure_rate
+        starts = rng.integers(0, max(t - flen, 1), size=n)
+        for i in np.flatnonzero(failed):
+            mask[i, starts[i]:starts[i] + flen] = 0.05    # kernel remnant
+        return mask
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, ScenarioSpec] = {}
+
+
+def register_scenario(spec: ScenarioSpec, *, overwrite: bool = False) -> ScenarioSpec:
+    if not overwrite and spec.name in _REGISTRY:
+        raise ValueError(f"scenario {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_scenario(scenario: Union[str, ScenarioSpec]) -> ScenarioSpec:
+    if isinstance(scenario, ScenarioSpec):
+        return scenario
+    try:
+        return _REGISTRY[scenario]
+    except KeyError:
+        known = ", ".join(sorted(_REGISTRY))
+        raise KeyError(f"unknown scenario {scenario!r}; known: {known}") \
+            from None
+
+
+def list_scenarios() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+# The paper's four Sec. IV.A memory configurations, expressed as demand
+# scenarios (5 nodes, 125 GB, HPCC as the priority tenant).  What varies
+# across them is the static demand floor (Spark executor + RDD cache +
+# OS baseline) and whether HPCC runs at all; the storage policy under
+# test is supplied by the sweep's gain set.
+register_scenario(ScenarioSpec(
+    name="paper-c1-spark45", family="hpcc", n_nodes=5, n_intervals=4200,
+    offset_gib=47.0, amp_range=(1.0, 1.0), phase_shift=False,
+    description="Sec. IV.A config 1: Spark 20G + 25G RDD cache + OS, HPCC"))
+register_scenario(ScenarioSpec(
+    name="paper-c2-static25", family="hpcc", n_nodes=5, n_intervals=4200,
+    offset_gib=22.0, amp_range=(1.0, 1.0), phase_shift=False,
+    description="Sec. IV.A config 2: Spark 20G + OS, static Alluxio 25G"))
+register_scenario(ScenarioSpec(
+    name="paper-c3-dynims60", family="hpcc", n_nodes=5, n_intervals=4200,
+    offset_gib=22.0, amp_range=(1.0, 1.0), phase_shift=False,
+    description="Sec. IV.A config 3: Spark 20G + OS, DynIMS U_max=60G"))
+register_scenario(ScenarioSpec(
+    name="paper-c4-nohpcc", family="constant", n_nodes=5, n_intervals=4200,
+    base_gib=0.0, offset_gib=22.0, amp_range=(1.0, 1.0),
+    description="Sec. IV.A config 4: no HPCC -- static upper bound"))
+
+# Beyond-paper stress scenarios.
+register_scenario(ScenarioSpec(
+    name="bursty-serving", family="bursty", n_nodes=256, n_intervals=1200,
+    base_gib=55.0, burst_gib=50.0, burst_every_s=15.0, burst_len_s=3.0,
+    amp_range=(0.9, 1.1),
+    description="KV-admission waves: 55G plateau, +50G spikes every 15 s"))
+register_scenario(ScenarioSpec(
+    name="hetero-fleet", family="hpcc", n_nodes=512, n_intervals=1000,
+    amp_range=(0.5, 1.5), memory_jitter=0.2,
+    description="mixed hardware: M in [100, 150]G, load amp in [0.5, 1.5]"))
+register_scenario(ScenarioSpec(
+    name="swap-storm", family="bursty", n_nodes=128, n_intervals=1000,
+    base_gib=85.0, burst_gib=45.0, burst_every_s=10.0, burst_len_s=4.0,
+    description="demand bursts past M: reclaim must race the swap cliff"))
+register_scenario(ScenarioSpec(
+    name="phase-replay", family="hpcc", n_nodes=1024, n_intervals=1000,
+    amp_range=(0.8, 1.2), phase_shift=True,
+    description="fleet-scale phase-shifted HPCC replay (simulate_fleet's "
+                "workload)"))
+register_scenario(ScenarioSpec(
+    name="failover-churn", family="constant", n_nodes=256, n_intervals=1200,
+    base_gib=60.0, amp_range=(0.9, 1.1), failure_rate=0.15,
+    failure_len_s=10.0,
+    description="15% of nodes crash-restart: grant path under churn"))

@@ -1,0 +1,118 @@
+"""Scoring: fleet-stability metrics and gain objectives (Figs. 5-8 analogues).
+
+Pure functions of sweep output.  :func:`compute_fleet_stats` reduces a
+closed-loop utilization/capacity history to the paper-evaluation
+metrics -- pressure-violation rate, time over ``r0``, mean/p99
+utilization, granted-capacity volume, settle time -- and is written in
+``jax.numpy`` so the sweep engine can fuse it into the jitted scan
+(it accepts plain numpy arrays equally, which is how the legacy
+Python-loop fleet sim and the tests call it).
+
+:func:`default_score` folds a :class:`FleetStats` into one scalar per
+gain point -- higher is better -- trading granted storage against
+pressure.  Tuning (``lab.tune``) maximizes it; swap in any callable
+with the same signature for a different objective.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.traces import GiB
+
+Array = Union[np.ndarray, jnp.ndarray]
+
+# A few thousandths over r0 is measurement noise, not pressure (matches
+# the historical simulate_fleet threshold).
+OVER_R0_EPS = 1e-3
+# Settle band: the fleet has settled once its max utilization stays
+# within this margin above r0.
+SETTLE_TOL = 0.02
+
+
+class FleetStats(NamedTuple):
+    """Per-gain stability metrics; each field is scalar or ``(G,)``."""
+
+    mean_utilization: Array
+    p99_utilization: Array
+    max_utilization: Array
+    frac_intervals_over_r0: Array    # share of (t, n) samples with r > r0
+    max_over_r0: Array               # worst excursion above r0
+    pressure_violation_rate: Array   # share of (t, n) samples with r > 1
+    mean_capacity_gib: Array
+    capacity_std_gib: Array
+    granted_volume_gib_s: Array      # integral of the storage grant
+    settle_intervals: Array          # first t after which max util <= r0+tol
+
+
+def compute_fleet_stats(
+    utils: Array,
+    caps: Array,
+    *,
+    r0: Union[float, Array],
+    interval_s: float,
+    p99_utilization: Optional[Array] = None,
+) -> FleetStats:
+    """Reduce a ``(T, N)`` closed-loop history to :class:`FleetStats`.
+
+    ``utils`` is the observed utilization ratio ``v / M`` per interval
+    and node; ``caps`` the granted storage capacity in bytes.  ``r0``
+    may be traced (the sweep engine vmaps this function over gains).
+
+    Every statistic except p99 is a streaming reduction XLA fuses into
+    the producing scan.  The quantile needs the full distribution and
+    XLA's CPU sort is ~40x slower than numpy's selection, so the sweep
+    engine computes it host-side on the materialized history and passes
+    it in via ``p99_utilization``; left as None it is computed here.
+    """
+    utils = jnp.asarray(utils)
+    caps = jnp.asarray(caps)
+    t = utils.shape[0]
+    over = jnp.clip(utils - r0, 0.0, None)
+    fleet_max = utils.max(axis=1)                          # (T,)
+    bad = fleet_max > r0 + SETTLE_TOL
+    last_bad = jnp.where(bad.any(), t - 1 - jnp.argmax(bad[::-1]), -1)
+    if p99_utilization is None:
+        p99_utilization = jnp.quantile(utils, 0.99)
+    return FleetStats(
+        mean_utilization=utils.mean(),
+        p99_utilization=p99_utilization,
+        max_utilization=utils.max(),
+        frac_intervals_over_r0=(utils > r0 + OVER_R0_EPS).mean(),
+        max_over_r0=over.max(),
+        pressure_violation_rate=(utils > 1.0).mean(),
+        mean_capacity_gib=caps.mean() / GiB,
+        capacity_std_gib=caps.std() / GiB,
+        granted_volume_gib_s=caps.mean(axis=1).sum() * interval_s / GiB,
+        settle_intervals=(last_bad + 1).astype(jnp.int32),
+    )
+
+
+def default_score(stats: FleetStats) -> Array:
+    """Storage yield minus pressure penalties; higher is better.
+
+    Units are GiB of mean granted capacity.  The weights price the
+    paper's asymmetry: a swapping node (utilization > 1) collapses HPL
+    by ~10x (Fig. 2), so violations dominate; sustained time above
+    ``r0`` costs throughput; slow settling delays every burst response.
+    """
+    return (
+        jnp.asarray(stats.mean_capacity_gib)
+        - 200.0 * jnp.asarray(stats.frac_intervals_over_r0)
+        - 2000.0 * jnp.asarray(stats.pressure_violation_rate)
+        - 100.0 * jnp.asarray(stats.max_over_r0)
+        - 0.01 * jnp.asarray(stats.settle_intervals)
+    )
+
+
+def stats_to_dict(stats: FleetStats,
+                  index: Optional[int] = None) -> Dict[str, float]:
+    """One gain point's stats as a plain-float dict (JSON-friendly)."""
+    out = {}
+    for name, value in stats._asdict().items():
+        arr = np.asarray(value)
+        out[name] = float(arr if arr.ndim == 0 else arr[index])
+    return out

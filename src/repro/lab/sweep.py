@@ -1,0 +1,274 @@
+"""The vectorized scenario-sweep engine.
+
+One compiled program runs thousands of closed-loop simulations: a
+scenario's demand traces are compiled to a dense ``(N, T)`` array, the
+full control loop (saturated store, Eq. 1 update, clamp) runs as a
+single jitted :func:`jax.lax.scan` over time, and that scan is
+``vmap``'d over a :class:`GainSet` -- a whole gain grid advances in
+lockstep, one XLA dispatch for the entire sweep.  Contrast with the
+historical fleet sim (``cluster_sim.simulate_fleet(engine="python")``),
+which re-entered Python to dispatch its jitted step once per interval;
+``benchmarks/lab_bench.py`` measures the gap in
+node*interval*config throughput.
+
+Gain chunks bound peak memory: each jitted call reduces its
+``(chunk, T, N)`` histories to :class:`~repro.lab.score.FleetStats`,
+materializing only the utilization history (for the host-side p99
+selection), so sweeping a 4096-node scenario over hundreds of gain
+points stays within a few hundred MB.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.control import ControllerParams, vectorized_step
+from .scenarios import ScenarioSpec, get_scenario
+from .score import FleetStats, compute_fleet_stats, default_score
+
+DEFAULT_CHUNK = 8
+
+
+# ---------------------------------------------------------------------------
+# Gain sets
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GainSet:
+    """``G`` candidate control-law gain points, packed as arrays.
+
+    Every law knob the sweep engine simulates is here -- a
+    :class:`ControllerParams` round-trips losslessly through
+    :meth:`from_params` / :meth:`params_at`, so the loop a tune run
+    scores is the loop the tuned params deploy.  ``lam_grant`` equals
+    ``lam`` where the gains are symmetric (the paper-faithful case);
+    capacities are bytes.  Scalar / length-1 fields broadcast to the
+    set's length.
+    """
+
+    r0: np.ndarray
+    lam: np.ndarray
+    lam_grant: np.ndarray
+    u_min: np.ndarray
+    u_max: np.ndarray
+    deadband: np.ndarray = 0.0
+    feedforward: np.ndarray = 0.0
+
+    def __post_init__(self) -> None:
+        arrays = {f.name: np.atleast_1d(np.asarray(getattr(self, f.name),
+                                                   dtype=np.float64))
+                  for f in dataclasses.fields(self)}
+        g = max(a.shape[0] for a in arrays.values())
+        sizes = {a.shape[0] for a in arrays.values()} - {1, g}
+        if sizes:
+            raise ValueError(f"gain arrays must share a length or be "
+                             f"scalar; got lengths {sizes | {g}}")
+        for name, arr in arrays.items():
+            object.__setattr__(self, name,
+                               np.broadcast_to(arr, (g,)).copy()
+                               if arr.shape[0] != g else arr)
+
+    def __len__(self) -> int:
+        return self.r0.shape[0]
+
+    @classmethod
+    def from_params(cls, params: ControllerParams,
+                    *more: ControllerParams) -> "GainSet":
+        ps = (params,) + more
+        return cls(
+            r0=np.array([p.r0 for p in ps]),
+            lam=np.array([p.lam for p in ps]),
+            lam_grant=np.array([p.lam_grant if p.lam_grant is not None
+                                else p.lam for p in ps]),
+            u_min=np.array([p.u_min for p in ps]),
+            u_max=np.array([p.u_max for p in ps]),
+            deadband=np.array([p.deadband for p in ps]),
+            feedforward=np.array([p.feedforward for p in ps]),
+        )
+
+    def params_at(self, i: int, base: ControllerParams) -> ControllerParams:
+        """Materialize gain point ``i`` as a :class:`ControllerParams`."""
+        lam = float(self.lam[i])
+        lam_grant = float(self.lam_grant[i])
+        return base.replace(
+            r0=float(self.r0[i]), lam=lam,
+            lam_grant=None if lam_grant == lam else lam_grant,
+            u_min=float(self.u_min[i]), u_max=float(self.u_max[i]),
+            deadband=float(self.deadband[i]),
+            feedforward=float(self.feedforward[i]))
+
+    def concat(self, other: "GainSet") -> "GainSet":
+        return GainSet(*(np.concatenate([getattr(self, f.name),
+                                         getattr(other, f.name)])
+                         for f in dataclasses.fields(self)))
+
+    def slice(self, lo: int, hi: int) -> "GainSet":
+        return GainSet(*(getattr(self, f.name)[lo:hi]
+                         for f in dataclasses.fields(self)))
+
+
+# ---------------------------------------------------------------------------
+# The compiled sweep
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("interval_s", "occupancy"))
+def _sweep_chunk(demand_tn, m, r0, lam, lam_grant, u_min, u_max, deadband,
+                 feedforward, *, interval_s: float, occupancy: float):
+    """Closed loop for one gain chunk: scan over T, vmap over gains.
+
+    ``demand_tn`` is ``(T, N)`` bytes (shared by every gain point),
+    ``m`` is ``(N,)`` bytes, gain arrays are ``(G,)``.  Returns
+    ``(stats, utils)``: :class:`FleetStats` with ``(G,)`` fields (p99
+    zero-filled -- the caller computes it host-side, where numpy's
+    selection beats XLA's CPU sort ~40x) plus the ``(G, T, N)``
+    utilization history it needs to do so.  Capacity histories never
+    leave the jitted computation.
+    """
+    demand_tn = jnp.asarray(demand_tn, jnp.float32)
+    m = jnp.asarray(m, jnp.float32)
+
+    def one_gain(r0_g, lam_g, lam_grant_g, u_min_g, u_max_g, db_g, ff_g):
+        u0 = jnp.full(demand_tn.shape[1:], u_max_g, jnp.float32)
+        # Seed v_prev with the first interval's usage so the slope term
+        # is exactly zero before there is a previous observation
+        # (matching the scalar loop's v_prev=None first step).
+        v_prev0 = demand_tn[0] + occupancy * u0
+
+        def step(carry, d):
+            u, v_prev = carry
+            v = d + occupancy * u                          # saturated store
+            # ``vectorized_step``'s own feedforward branch is resolved
+            # at trace time from a Python float, which a vmapped gain
+            # axis cannot feed; applying it to v up front is identical
+            # (the law uses v_eff everywhere v appears).
+            v_eff = v + ff_g * (v - v_prev)
+            u_next = vectorized_step(
+                u, v_eff, total_memory=m, r0=r0_g, lam=lam_g,
+                u_min=u_min_g, u_max=u_max_g, lam_grant=lam_grant_g,
+                deadband=db_g)
+            return (u_next, v), (v / m, u_next)
+
+        _, (utils, caps) = jax.lax.scan(step, (u0, v_prev0), demand_tn)
+        stats = compute_fleet_stats(utils, caps, r0=r0_g,
+                                    interval_s=interval_s,
+                                    p99_utilization=jnp.zeros(()))
+        return stats, utils
+
+    return jax.vmap(one_gain)(
+        jnp.asarray(r0, jnp.float32), jnp.asarray(lam, jnp.float32),
+        jnp.asarray(lam_grant, jnp.float32),
+        jnp.asarray(u_min, jnp.float32), jnp.asarray(u_max, jnp.float32),
+        jnp.asarray(deadband, jnp.float32),
+        jnp.asarray(feedforward, jnp.float32))
+
+
+def sweep_demand(
+    demand: np.ndarray,
+    gains: GainSet,
+    *,
+    node_memory: Union[float, np.ndarray],
+    interval_s: float = 0.1,
+    occupancy: float = 1.0,
+    chunk: int = DEFAULT_CHUNK,
+) -> FleetStats:
+    """Sweep a raw ``(N, T)`` demand matrix over every gain point.
+
+    The low-level entry: :func:`run_sweep` compiles a scenario down to
+    this, and ``cluster_sim.simulate_fleet`` feeds it the historical
+    fleet workload directly.  Returns ``(G,)``-field stats as numpy.
+    """
+    demand = np.asarray(demand)
+    n_nodes = demand.shape[0]
+    demand_tn = np.ascontiguousarray(demand.T, dtype=np.float32)
+    m = np.broadcast_to(np.asarray(node_memory, np.float64),
+                        (n_nodes,)).astype(np.float32)
+    chunk = max(chunk, 1)
+    # Pad the ragged tail up to the chunk width (repeating the last gain)
+    # so every call hits the same shape-specialized jit executable; the
+    # padded rows' stats are sliced off below.
+    n_real = len(gains)
+    if n_real > chunk and n_real % chunk:
+        pad = GainSet(*(np.repeat(getattr(gains, f.name)[-1:],
+                                  chunk - n_real % chunk)
+                        for f in dataclasses.fields(GainSet)))
+        gains = gains.concat(pad)
+    chunks = []
+    for lo in range(0, len(gains), chunk):
+        g = gains.slice(lo, lo + chunk)
+        stats, utils = _sweep_chunk(
+            demand_tn, m, g.r0, g.lam, g.lam_grant, g.u_min, g.u_max,
+            g.deadband, g.feedforward,
+            interval_s=float(interval_s), occupancy=float(occupancy))
+        stats = jax.tree_util.tree_map(np.asarray, stats)
+        utils = np.asarray(utils)
+        p99 = np.array([np.quantile(utils[i], 0.99)
+                        for i in range(utils.shape[0])], utils.dtype)
+        chunks.append(stats._replace(p99_utilization=p99))
+    return FleetStats(*(np.concatenate([getattr(c, f)
+                                        for c in chunks])[:n_real]
+                        for f in FleetStats._fields))
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Everything one sweep produced, gain-point-aligned."""
+
+    scenario: ScenarioSpec
+    gains: GainSet
+    stats: FleetStats                 # (G,) numpy fields
+    seed: int
+    elapsed_s: float
+
+    @property
+    def n_configs(self) -> int:
+        return len(self.gains)
+
+    @property
+    def throughput(self) -> float:
+        """node * interval * config closed-loop updates per second."""
+        work = (self.scenario.n_nodes * self.scenario.n_intervals
+                * self.n_configs)
+        return work / self.elapsed_s if self.elapsed_s > 0 else float("inf")
+
+    def scores(self, score_fn=default_score) -> np.ndarray:
+        return np.asarray(score_fn(self.stats))
+
+    def best(self, score_fn=default_score) -> int:
+        return int(np.argmax(self.scores(score_fn)))
+
+    def top(self, k: int = 5, score_fn=default_score) -> Sequence[int]:
+        s = self.scores(score_fn)
+        return list(np.argsort(-s)[:k])
+
+
+def run_sweep(
+    scenario: Union[str, ScenarioSpec],
+    gains: GainSet,
+    *,
+    seed: int = 0,
+    chunk: int = DEFAULT_CHUNK,
+    node_memory: Optional[Union[float, np.ndarray]] = None,
+) -> SweepResult:
+    """Compile ``scenario`` and run its closed loop over every gain.
+
+    ``node_memory`` overrides the scenario's per-node budget (bytes);
+    by default the spec's (possibly jittered) fleet memory is used.
+    """
+    spec = get_scenario(scenario)
+    demand = spec.build_demand(seed=seed)
+    m = spec.build_node_memory(seed=seed) if node_memory is None \
+        else node_memory
+    t0 = time.perf_counter()
+    stats = sweep_demand(
+        demand, gains, node_memory=m, interval_s=spec.interval_s,
+        occupancy=spec.occupancy, chunk=chunk)
+    elapsed = time.perf_counter() - t0
+    return SweepResult(scenario=spec, gains=gains, stats=stats, seed=seed,
+                       elapsed_s=elapsed)

@@ -1,0 +1,154 @@
+"""Gain autotuning over the sweep engine.
+
+The paper hand-picks one gain set (Table I) for one testbed; Liang '17
+and Will '22 (PAPERS.md) both show memory-capacity settings are
+workload-specific.  This module closes that gap: build a gain grid
+(:func:`grid_gains`) or a random cloud (:func:`random_gains`), sweep a
+scenario's closed loop over all of it in one compiled program, and
+materialize the argmax as a :class:`~repro.core.control.ControllerParams`
+ready to hand to a ``MemoryPlane``.
+
+The candidate set always includes the baseline gains, so a tuned
+result never scores below the paper defaults on the tuning scenario.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Union
+
+import numpy as np
+
+from ..configs.dynims import PAPER_TABLE_I
+from ..core.control import ControllerParams
+from .scenarios import ScenarioSpec, get_scenario
+from .score import FleetStats, default_score, stats_to_dict
+from .sweep import DEFAULT_CHUNK, GainSet, SweepResult, run_sweep
+
+ScoreFn = Callable[[FleetStats], np.ndarray]
+
+
+def grid_gains(
+    base: Optional[ControllerParams] = None,
+    *,
+    lam: Sequence[float] = (0.1, 0.25, 0.5, 0.75, 1.0, 1.25, 1.5, 1.8),
+    r0: Sequence[float] = (0.88, 0.90, 0.92, 0.94, 0.95, 0.96, 0.97, 0.98),
+    lam_grant: Sequence[Optional[float]] = (None,),
+    u_max: Optional[Sequence[float]] = None,
+) -> GainSet:
+    """Cartesian product of gain axes around ``base`` (paper Table I).
+
+    ``lam_grant=None`` entries mean symmetric gains (grant at ``lam``);
+    ``u_max`` entries are bytes and default to the base cap.
+    """
+    base = base or PAPER_TABLE_I
+    u_maxes = tuple(u_max) if u_max is not None else (base.u_max,)
+    rows = [(r, l, l if g is None else g, um)
+            for r in r0 for l in lam for g in lam_grant for um in u_maxes]
+    arr = np.asarray(rows, dtype=np.float64)
+    return GainSet(r0=arr[:, 0], lam=arr[:, 1], lam_grant=arr[:, 2],
+                   u_min=np.full(len(rows), base.u_min), u_max=arr[:, 3],
+                   deadband=base.deadband, feedforward=base.feedforward)
+
+
+def random_gains(
+    n: int,
+    base: Optional[ControllerParams] = None,
+    *,
+    seed: int = 0,
+    lam_range: Sequence[float] = (0.05, 1.9),
+    r0_range: Sequence[float] = (0.85, 0.98),
+    asymmetric: bool = True,
+) -> GainSet:
+    """``n`` random gain points inside the stable region (0 < lam < 2)."""
+    base = base or PAPER_TABLE_I
+    rng = np.random.default_rng(seed)
+    lam = rng.uniform(*lam_range, size=n)
+    r0 = rng.uniform(*r0_range, size=n)
+    lam_grant = rng.uniform(*lam_range, size=n) if asymmetric else lam.copy()
+    return GainSet(r0=r0, lam=lam, lam_grant=lam_grant,
+                   u_min=np.full(n, base.u_min), u_max=np.full(n, base.u_max),
+                   deadband=base.deadband, feedforward=base.feedforward)
+
+
+@dataclasses.dataclass
+class TuneResult:
+    """Outcome of one autotuning run."""
+
+    params: ControllerParams          # the tuned gains, ready to deploy
+    score: float
+    baseline_params: ControllerParams
+    baseline_score: float
+    index: int                        # argmax into ``sweep.gains``
+    sweep: SweepResult
+
+    @property
+    def improvement(self) -> float:
+        return self.score - self.baseline_score
+
+    def best_stats(self) -> dict:
+        return stats_to_dict(self.sweep.stats, self.index)
+
+    def summary(self, k: int = 5) -> str:
+        """Human-readable top-``k`` table for example scripts."""
+        s = self.sweep.scores()
+        lines = [f"scenario={self.sweep.scenario.name} "
+                 f"configs={self.sweep.n_configs} "
+                 f"throughput={self.sweep.throughput:.2e} node*intv*cfg/s",
+                 f"{'rank':>4} {'r0':>6} {'lam':>6} {'lam_g':>6} "
+                 f"{'u_max_gib':>9} {'score':>9}"]
+        g = self.sweep.gains
+        for rank, i in enumerate(self.sweep.top(k)):
+            lines.append(
+                f"{rank:4d} {g.r0[i]:6.3f} {g.lam[i]:6.3f} "
+                f"{g.lam_grant[i]:6.3f} {g.u_max[i] / 2**30:9.1f} "
+                f"{s[i]:9.3f}")
+        lines.append(
+            f"baseline (r0={self.baseline_params.r0}, "
+            f"lam={self.baseline_params.lam}) score="
+            f"{self.baseline_score:.3f}  ->  tuned +{self.improvement:.3f}")
+        return "\n".join(lines)
+
+
+def tune_gains(
+    scenario: Union[str, ScenarioSpec],
+    *,
+    base_params: Optional[ControllerParams] = None,
+    gains: Optional[GainSet] = None,
+    method: str = "grid",
+    budget: int = 64,
+    seed: int = 0,
+    score_fn: ScoreFn = default_score,
+    chunk: int = DEFAULT_CHUNK,
+) -> TuneResult:
+    """Search gains for ``scenario`` and return the winner.
+
+    ``method`` is ``"grid"`` (cartesian lam x r0 product sized to
+    ``budget``) or ``"random"``; pass an explicit ``gains`` set to
+    bring your own candidates.  The baseline (``base_params``, default
+    paper Table I) is always appended as the final candidate.
+    """
+    base = base_params or PAPER_TABLE_I
+    if gains is None:
+        if method == "grid":
+            k = max(int(np.sqrt(budget)), 2)
+            lam = np.linspace(0.1, 1.8, k)
+            r0 = np.linspace(0.88, 0.98, k)
+            gains = grid_gains(base, lam=lam, r0=r0)
+        elif method == "random":
+            gains = random_gains(budget, base, seed=seed + 7)
+        else:
+            raise ValueError("method must be grid|random")
+    candidates = gains.concat(GainSet.from_params(base))
+    result = run_sweep(scenario, candidates, seed=seed, chunk=chunk)
+    scores = result.scores(score_fn)
+    best = int(np.argmax(scores))
+    baseline_score = float(scores[-1])          # base appended last
+    return TuneResult(
+        params=candidates.params_at(best, base),
+        score=float(scores[best]),
+        baseline_params=base,
+        baseline_score=baseline_score,
+        index=best,
+        sweep=result,
+    )

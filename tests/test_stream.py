@@ -1,0 +1,100 @@
+"""MetricAggregator (core/stream.py): window aggregates, slope, bus wiring."""
+
+import numpy as np
+import pytest
+
+from repro.core.bus import MessageBus
+from repro.core.monitor import MemorySample, SimulatedMonitor
+from repro.core.stream import (AGG_TOPIC, AggregatedMetrics, MetricAggregator,
+                               RAW_TOPIC)
+
+GiB = float(2**30)
+
+
+def sample(used, node="n0", i=0, total=125 * GiB, storage=0.0, swap=0.0):
+    return MemorySample(node=node, timestamp=i * 0.1, used=used, total=total,
+                        storage_used=storage, swap_used=swap)
+
+
+def test_single_sample_aggregates():
+    agg = MetricAggregator(window=4)
+    a = agg.update(sample(10 * GiB))
+    assert a.used_latest == a.used_mean == a.used_max == 10 * GiB
+    assert a.used_ewma == 10 * GiB          # EWMA seeds at first sample
+    assert a.slope_per_interval == 0.0      # no slope from one point
+    assert a.n_samples == 1
+    assert a.utilization == pytest.approx(10 / 125)
+
+
+def test_window_mean_max_and_eviction():
+    agg = MetricAggregator(window=3)
+    for i, used in enumerate([10.0, 20.0, 30.0, 40.0]):
+        a = agg.update(sample(used, i=i))
+    # window holds the last 3: [20, 30, 40]
+    assert a.used_latest == 40.0
+    assert a.used_mean == pytest.approx(30.0)
+    assert a.used_max == 40.0
+    assert a.n_samples == 3
+
+
+def test_ewma_recursion():
+    alpha = 0.25
+    agg = MetricAggregator(window=8, ewma_alpha=alpha)
+    values = [10.0, 50.0, 30.0]
+    expected = values[0]
+    for i, used in enumerate(values):
+        a = agg.update(sample(used, i=i))
+        expected = alpha * used + (1 - alpha) * expected if i else values[0]
+    assert a.used_ewma == pytest.approx(expected)
+
+
+def test_slope_least_squares():
+    agg = MetricAggregator(window=8)
+    # exact ramp: slope == step
+    for i in range(5):
+        a = agg.update(sample(100.0 + 7.0 * i, i=i))
+    assert a.slope_per_interval == pytest.approx(7.0)
+    # flat tail pulls the fitted slope below the ramp's
+    for i in range(5, 10):
+        a = agg.update(sample(128.0, i=i))
+    assert 0.0 <= a.slope_per_interval < 7.0
+    # least squares on a noisy-but-linear window stays close
+    rng = np.random.default_rng(0)
+    agg2 = MetricAggregator(window=8)
+    for i in range(8):
+        a2 = agg2.update(sample(5.0 * i + float(rng.normal(0, 1e-3)), i=i))
+    assert a2.slope_per_interval == pytest.approx(5.0, abs=1e-2)
+
+
+def test_per_node_isolation():
+    agg = MetricAggregator(window=4)
+    agg.update(sample(10.0, node="a"))
+    b = agg.update(sample(99.0, node="b"))
+    a = agg.update(sample(20.0, node="a", i=1))
+    assert a.used_mean == pytest.approx(15.0)
+    assert b.used_mean == pytest.approx(99.0)
+    assert agg.latest("a").used == 20.0
+    assert agg.latest("b").used == 99.0
+    assert agg.latest("missing") is None
+
+
+def test_bus_raw_to_agg_pipeline():
+    bus = MessageBus()
+    MetricAggregator(window=4, bus=bus)
+    got = []
+    bus.subscribe(AGG_TOPIC, got.append)
+    mon = SimulatedMonitor("n0", total=125 * GiB,
+                           usage=[10 * GiB, 20 * GiB])
+    bus.publish(RAW_TOPIC, mon.sample())
+    bus.publish(RAW_TOPIC, mon.sample())
+    assert len(got) == 2
+    assert isinstance(got[-1], AggregatedMetrics)
+    assert got[-1].node == "n0"
+    assert got[-1].used_latest == 20 * GiB
+    assert got[-1].used_max == 20 * GiB
+    assert got[-1].n_samples == 2
+
+
+def test_window_validation():
+    with pytest.raises(ValueError):
+        MetricAggregator(window=0)
