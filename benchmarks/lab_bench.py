@@ -1,20 +1,38 @@
-"""ScenarioLab sweep-engine benchmark vs the Python-loop fleet sim.
+"""ScenarioLab sweep-engine benchmarks.
 
-Times the same fleet-scale closed loop (phase-shifted HPCC demand,
-paper Table I gains) three ways:
+Times the fleet-scale closed loop (phase-shifted HPCC demand, paper
+Table I gains) across engines and knobs:
 
 * ``python_loop``  -- ``simulate_fleet(engine="python")``: one fused
   jitted step per interval, re-entering Python T times.
 * ``lab_scan``     -- ``simulate_fleet(engine="lab")``: the whole
   horizon as one jitted ``lax.scan`` (single dispatch).
-* ``lab_sweep_G``  -- the lab engine amortized over a G-point gain
-  grid ``vmap``'d through the same scan.
+* ``lab_sweep_G``  -- the device-resident engine amortized over a
+  G-point gain grid: histories never leave the device (streamed stats
+  + fixed-bin quantile bisection), O(G) bytes per chunk to the host.
 
 The figure of merit is **node*interval*config closed-loop updates per
-second**.  Writes ``BENCH_lab.json`` at the repo root and prints a
-table.  Usage:
+second**.  Writes two artifacts at the repo root:
+
+* ``BENCH_lab.json``   -- headline ``sweep_throughput`` rows plus a
+  ``smoke_reference`` section (the small shape CI re-measures).
+* ``BENCH_sweep.json`` -- ``chunked_throughput`` (chunk-size sweep on
+  the device-resident path), ``device_scaling`` (gain axis
+  ``shard_map``'d over forced host devices), ``time_to_best`` (grid vs
+  successive-halving time-to-best-gain on swap-storm).
+
+Usage:
 
     PYTHONPATH=src python benchmarks/lab_bench.py [--nodes 4096]
+    PYTHONPATH=src python benchmarks/lab_bench.py --smoke \
+        --check-baseline BENCH_lab.json   # CI regression gate
+
+The smoke run times the small reference shape only (no artifacts
+unless ``--out``/``--sweep-out`` is given) and, with
+``--check-baseline``, fails if the sweep speedup over the same-run
+``python_loop`` row regresses more than ``--max-regress`` (default
+20%) against the checked-in ``smoke_reference`` -- normalizing by the
+python-loop row keeps the gate honest across machine speeds.
 """
 
 from __future__ import annotations
@@ -22,11 +40,14 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
+import sys
 import time
 
 import numpy as np
 
 REPEATS = 3
+SMOKE_SHAPE = dict(n_nodes=256, n_intervals=300, n_configs=16)
 
 
 def _best(fn) -> float:
@@ -40,72 +61,262 @@ def _best(fn) -> float:
     return min(times)
 
 
-def bench(n_nodes: int, n_intervals: int, n_configs: int,
-          seed: int = 0) -> list:
+def _row(name: str, n_nodes: int, n_intervals: int, configs: int,
+         elapsed: float, **extra) -> dict:
+    work = n_nodes * n_intervals * configs
+    return {"engine": name, "n_nodes": n_nodes, "n_intervals": n_intervals,
+            "n_configs": configs, "elapsed_s": elapsed,
+            "throughput_upd_per_s": work / elapsed, **extra}
+
+
+def _bench_gains(n_configs: int):
+    """The benchmark's canonical ~n_configs (lam x r0) grid."""
+    from repro.core.cluster_sim import paper_controller_params
+    from repro.lab import grid_gains
+    k = max(int(np.sqrt(n_configs)), 2)
+    return grid_gains(paper_controller_params(),
+                      lam=np.linspace(0.1, 1.8, k),
+                      r0=np.linspace(0.88, 0.98, k))
+
+
+def bench_engines(n_nodes: int, n_intervals: int, n_configs: int,
+                  seed: int = 0) -> list:
+    """The headline engine comparison at one (nodes, intervals) shape."""
     from repro.core.cluster_sim import paper_controller_params, simulate_fleet
     from repro.core.traces import fleet_demand_traces
-    from repro.lab import GainSet, grid_gains, sweep_demand
+    from repro.lab import sweep_demand
 
     p = paper_controller_params()
-    rows = []
-
-    def timed(name, configs, fn):
-        elapsed = _best(fn)
-        work = n_nodes * n_intervals * configs
-        rows.append({
-            "engine": name,
-            "n_nodes": n_nodes,
-            "n_intervals": n_intervals,
-            "n_configs": configs,
-            "elapsed_s": elapsed,
-            "throughput_upd_per_s": work / elapsed,
-        })
-
-    timed("python_loop", 1,
-          lambda: simulate_fleet(n_nodes, n_intervals, seed=seed,
-                                 engine="python"))
-    timed("lab_scan", 1,
-          lambda: simulate_fleet(n_nodes, n_intervals, seed=seed,
-                                 engine="lab"))
-
+    rows = [
+        _row("python_loop", n_nodes, n_intervals, 1,
+             _best(lambda: simulate_fleet(n_nodes, n_intervals, seed=seed,
+                                          engine="python"))),
+        _row("lab_scan", n_nodes, n_intervals, 1,
+             _best(lambda: simulate_fleet(n_nodes, n_intervals, seed=seed,
+                                          engine="lab"))),
+    ]
     # The sweep amortizes demand compilation across the grid: time only
     # the engine, as a tuner (which builds demand once) experiences it.
     demand = fleet_demand_traces(n_nodes, n_intervals, p.interval_s,
                                  seed=seed)
-    k = max(int(np.sqrt(n_configs)), 2)
-    gains = grid_gains(p, lam=np.linspace(0.1, 1.8, k),
-                       r0=np.linspace(0.88, 0.98, k))
-    timed(f"lab_sweep_{len(gains)}", len(gains),
-          lambda: sweep_demand(demand, gains, node_memory=p.total_memory,
-                               interval_s=p.interval_s))
-    return rows
-
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    default_out = os.path.join(os.path.dirname(os.path.dirname(
-        os.path.abspath(__file__))), "BENCH_lab.json")
-    ap.add_argument("--out", default=default_out)
-    ap.add_argument("--nodes", type=int, default=4096)
-    ap.add_argument("--intervals", type=int, default=1000)
-    ap.add_argument("--configs", type=int, default=64)
-    args = ap.parse_args()
-
-    rows = bench(args.nodes, args.intervals, args.configs)
+    gains = _bench_gains(n_configs)
+    rows.append(_row(
+        f"lab_sweep_{len(gains)}", n_nodes, n_intervals, len(gains),
+        _best(lambda: sweep_demand(demand, gains, node_memory=p.total_memory,
+                                   interval_s=p.interval_s))))
     base = rows[0]["throughput_upd_per_s"]
     for r in rows:
         r["speedup_vs_python_loop"] = r["throughput_upd_per_s"] / base
-    with open(args.out, "w") as fh:
-        json.dump({"sweep_throughput": rows}, fh, indent=2)
+    return rows
 
-    print(f"{'engine':>14} {'configs':>7} {'elapsed':>9} "
-          f"{'node*intv*cfg/s':>16} {'speedup':>8}")
+
+def bench_chunks(n_nodes: int, n_intervals: int, n_configs: int,
+                 seed: int = 0) -> list:
+    """Device-resident throughput vs gain-chunk width (incl. auto)."""
+    from repro.core.cluster_sim import paper_controller_params
+    from repro.core.traces import fleet_demand_traces
+    from repro.lab import sweep_demand
+
+    p = paper_controller_params()
+    demand = fleet_demand_traces(n_nodes, n_intervals, p.interval_s,
+                                 seed=seed)
+    gains = _bench_gains(n_configs)
+    rows = []
+    for chunk in (8, 32, 64, None):
+        el = _best(lambda: sweep_demand(
+            demand, gains, node_memory=p.total_memory,
+            interval_s=p.interval_s, chunk=chunk))
+        rows.append(_row(f"chunk_{'auto' if chunk is None else chunk}",
+                         n_nodes, n_intervals, len(gains), el))
+    return rows
+
+
+_SCALING_SNIPPET = r"""
+import os, json, time, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
+import numpy as np
+from repro.core.cluster_sim import paper_controller_params
+from repro.core.traces import fleet_demand_traces
+from repro.lab import grid_gains, sweep_demand
+n_nodes, n_intervals, n_configs, ndev = %d, %d, %d, %d
+p = paper_controller_params()
+demand = fleet_demand_traces(n_nodes, n_intervals, p.interval_s, seed=0)
+k = max(int(np.sqrt(n_configs)), 2)
+gains = grid_gains(p, lam=np.linspace(0.1, 1.8, k),
+                   r0=np.linspace(0.88, 0.98, k))
+run = lambda: sweep_demand(demand, gains, node_memory=p.total_memory,
+                           interval_s=p.interval_s, devices=ndev)
+run()
+best = 1e9
+for _ in range(3):
+    t0 = time.perf_counter()
+    run()
+    best = min(best, time.perf_counter() - t0)
+print(json.dumps({"elapsed_s": best, "n_configs": len(gains)}))
+"""
+
+
+def bench_device_scaling(n_nodes: int, n_intervals: int, n_configs: int,
+                         device_counts=(1, 2)) -> list:
+    """Gain-axis shard_map scaling over forced host devices.
+
+    Each count runs in a subprocess because XLA fixes the host device
+    count at first jax init.
+    """
+    rows = []
+    for ndev in device_counts:
+        code = _SCALING_SNIPPET % (ndev, n_nodes, n_intervals, n_configs,
+                                   ndev)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = env.get("PYTHONPATH") or "src"
+        proc = subprocess.run([sys.executable, "-c", code],
+                              capture_output=True, text=True, env=env,
+                              timeout=1800)
+        if proc.returncode != 0:
+            print(f"# device_scaling ndev={ndev} failed:\n"
+                  f"{proc.stderr[-1500:]}", file=sys.stderr)
+            continue
+        out = json.loads(proc.stdout.strip().splitlines()[-1])
+        rows.append(_row(f"devices_{ndev}", n_nodes, n_intervals,
+                         out["n_configs"], out["elapsed_s"]))
+    if rows:
+        base = rows[0]["throughput_upd_per_s"]
+        for r in rows:
+            r["scaling_vs_1_device"] = r["throughput_upd_per_s"] / base
+    return rows
+
+
+def bench_time_to_best(scenario: str = "swap-storm", budget: int = 64,
+                       seed: int = 0) -> list:
+    """Grid vs successive halving: wall-clock to the best gain point.
+
+    Times the warm (executables compiled) search, the steady state a
+    retuning deployment lives in; `compile_s` reports the one-time
+    cost.
+    """
+    from repro.lab import tune_gains
+
+    rows = []
+    for method in ("grid", "halving"):
+        run = lambda: tune_gains(scenario, method=method, budget=budget,
+                                 seed=seed)
+        t0 = time.perf_counter()
+        result = run()
+        cold = time.perf_counter() - t0
+        warm = _best(run)
+        rows.append({
+            "method": method, "scenario": scenario, "budget": budget,
+            "best_score": result.score,
+            "best_r0": result.params.r0, "best_lam": result.params.lam,
+            "wall_s_warm": warm, "compile_s": cold - warm,
+        })
+    g, h = rows
+    h["wall_vs_grid"] = h["wall_s_warm"] / g["wall_s_warm"]
+    h["reaches_grid_best"] = bool(h["best_score"] >= g["best_score"] - 1e-9)
+    return rows
+
+
+def check_baseline(smoke_rows: list, baseline_path: str,
+                   max_regress: float) -> int:
+    """Compare the smoke sweep speedup against the checked-in one."""
+    with open(baseline_path) as fh:
+        doc = json.load(fh)
+    ref_rows = doc.get("smoke_reference") or []
+    ref = {r["engine"]: r for r in ref_rows}
+    now = {r["engine"]: r for r in smoke_rows}
+    sweep_name = next((n for n in now if n.startswith("lab_sweep")), None)
+    if sweep_name is None or sweep_name not in ref:
+        print(f"# no comparable smoke_reference sweep row in "
+              f"{baseline_path}; nothing to check")
+        return 0
+    ref_ratio = ref[sweep_name]["speedup_vs_python_loop"]
+    now_ratio = now[sweep_name]["speedup_vs_python_loop"]
+    floor = ref_ratio * (1.0 - max_regress)
+    verdict = "OK" if now_ratio >= floor else "REGRESSION"
+    print(f"# sweep speedup vs python_loop: now {now_ratio:.2f}x, "
+          f"baseline {ref_ratio:.2f}x, floor {floor:.2f}x -> {verdict}")
+    return 0 if now_ratio >= floor else 1
+
+
+def print_rows(title: str, rows: list) -> None:
+    if not rows:
+        return
+    print(f"\n# {title}")
+    cols = []
     for r in rows:
-        print(f"{r['engine']:>14} {r['n_configs']:7d} "
-              f"{r['elapsed_s']:8.3f}s {r['throughput_upd_per_s']:16.3e} "
-              f"{r['speedup_vs_python_loop']:7.1f}x")
-    print(f"\nwrote {args.out}")
+        cols.extend(k for k in r if k not in cols)
+    print("  ".join(c.rjust(max(len(c), 12)) for c in cols))
+    for r in rows:
+        cells = []
+        for c in cols:
+            v = r.get(c)
+            s = f"{v:.4g}" if isinstance(v, float) else ("" if v is None
+                                                         else str(v))
+            cells.append(s.rjust(max(len(c), 12)))
+        print("  ".join(cells))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    ap.add_argument("--out", default=None,
+                    help="BENCH_lab.json path (default: repo root; "
+                         "omitted in --smoke unless given)")
+    ap.add_argument("--sweep-out", default=None,
+                    help="BENCH_sweep.json path (same default rules)")
+    ap.add_argument("--nodes", type=int, default=4096)
+    ap.add_argument("--intervals", type=int, default=1000)
+    ap.add_argument("--configs", type=int, default=64)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small-shape engine rows only; fast enough "
+                         "for a CI job")
+    ap.add_argument("--check-baseline", default=None, metavar="PATH",
+                    help="compare smoke speedups against this checked-in "
+                         "artifact; non-zero exit on regression")
+    ap.add_argument("--max-regress", type=float, default=0.2)
+    args = ap.parse_args()
+
+    smoke_rows = bench_engines(**SMOKE_SHAPE)
+    print_rows("smoke shape "
+               f"({SMOKE_SHAPE['n_nodes']}x{SMOKE_SHAPE['n_intervals']})",
+               smoke_rows)
+
+    if args.smoke:
+        if args.out:
+            with open(args.out, "w") as fh:
+                json.dump({"smoke_reference": smoke_rows}, fh, indent=2)
+            print(f"\nwrote {args.out}")
+        if args.check_baseline:
+            return check_baseline(smoke_rows, args.check_baseline,
+                                  args.max_regress)
+        return 0
+
+    rows = bench_engines(args.nodes, args.intervals, args.configs)
+    chunk_rows = bench_chunks(args.nodes, args.intervals, args.configs)
+    scaling_rows = bench_device_scaling(args.nodes, args.intervals,
+                                        args.configs)
+    ttb_rows = bench_time_to_best()
+
+    print_rows(f"engines ({args.nodes}x{args.intervals})", rows)
+    print_rows("chunked device-resident throughput", chunk_rows)
+    print_rows("device scaling (forced host devices)", scaling_rows)
+    print_rows("time-to-best-gain (swap-storm, 64+1 candidates)", ttb_rows)
+
+    out = args.out or os.path.join(root, "BENCH_lab.json")
+    with open(out, "w") as fh:
+        json.dump({"sweep_throughput": rows,
+                   "smoke_reference": smoke_rows}, fh, indent=2)
+    sweep_out = args.sweep_out or os.path.join(root, "BENCH_sweep.json")
+    with open(sweep_out, "w") as fh:
+        json.dump({"chunked_throughput": chunk_rows,
+                   "device_scaling": scaling_rows,
+                   "time_to_best": ttb_rows}, fh, indent=2)
+    print(f"\nwrote {out}\nwrote {sweep_out}")
+    if args.check_baseline:
+        return check_baseline(smoke_rows, args.check_baseline,
+                              args.max_regress)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -2,12 +2,15 @@
 
 Tunes the DynIMS gains for one named scenario -- thousands of closed
 loops (gain grid x fleet x horizon) compiled into one scanned/vmapped
-program -- prints the leaderboard against the paper's Table I defaults,
-then attaches the tuned ``ControllerParams`` to a live ``MemoryPlane``
-and replays a burst through it.
+device-resident program -- prints the leaderboard against the paper's
+Table I defaults, then attaches the tuned ``ControllerParams`` to a
+live ``MemoryPlane`` and replays a burst through it.
 
     PYTHONPATH=src python examples/tune_gains.py [scenario] [--budget N]
+    PYTHONPATH=src python examples/tune_gains.py --method halving ...
     PYTHONPATH=src python examples/tune_gains.py --all   # retune presets
+    PYTHONPATH=src python examples/tune_gains.py \
+        --portfolio swap-storm bursty-serving   # worst-case tuning
 """
 
 import argparse
@@ -15,15 +18,20 @@ import argparse
 from repro.configs.dynims import tuned_scenarios
 from repro.core import (GiB, MemoryPlane, NodeSpec, PlaneSpec, ShardCache,
                         SimulatedMonitor, StoreSpec)
-from repro.lab import get_scenario, list_scenarios, tune_gains
+from repro.lab import (get_scenario, list_scenarios, tune_gains,
+                       tune_portfolio)
 
 
-def tune_one(name: str, budget: int):
+def tune_one(name: str, budget: int, method: str = "grid"):
     spec = get_scenario(name)
     print(f"== {name}: {spec.description or spec.family}")
     print(f"   fleet={spec.n_nodes} nodes x {spec.n_intervals} intervals, "
-          f"{budget}+1 gain candidates")
-    result = tune_gains(name, budget=budget)
+          f"{budget}+1 gain candidates, method={method}")
+    result = tune_gains(name, budget=budget, method=method)
+    if result.rounds:
+        sched = " -> ".join(f"{r['n_candidates']}@T={r['horizon']}"
+                            for r in result.rounds)
+        print(f"   halving schedule: {sched}")
     print(result.summary())
     print()
     return result
@@ -60,17 +68,33 @@ def main() -> None:
     # 100 -> the 10x10 grid the checked-in LAB_TUNED presets came from;
     # --all with the default budget reproduces them exactly.
     ap.add_argument("--budget", type=int, default=100)
+    ap.add_argument("--method", default="grid",
+                    choices=("grid", "random", "halving"))
     ap.add_argument("--all", action="store_true",
                     help="retune every checked-in preset scenario")
+    ap.add_argument("--portfolio", nargs="+", metavar="SCENARIO",
+                    help="worst-case tune one gain set across these "
+                         "scenarios instead of single-scenario tuning")
     args = ap.parse_args()
 
+    if args.portfolio:
+        result = tune_portfolio(args.portfolio, budget=args.budget,
+                                aggregate="worst")
+        print(f"== portfolio (worst-case over {', '.join(args.portfolio)})")
+        for name, s in result.scenario_scores.items():
+            print(f"   {name}: winner scores {s:.3f}")
+        print(f"   tuned (r0={result.params.r0:.4f}, "
+              f"lam={result.params.lam:.4f}) aggregate={result.score:.3f} "
+              f"baseline={result.baseline_score:.3f} "
+              f"(+{result.improvement:.3f})")
+        return
     if args.all:
         for name in tuned_scenarios():
-            r = tune_one(name, args.budget)
+            r = tune_one(name, args.budget, args.method)
             print(f"   preset: LAB_TUNED[{name!r}] = PAPER_TABLE_I.replace("
                   f"r0={r.params.r0:.4f}, lam={r.params.lam:.4f})\n")
         return
-    result = tune_one(args.scenario, args.budget)
+    result = tune_one(args.scenario, args.budget, args.method)
     deploy(result)
 
 

@@ -460,9 +460,11 @@ def simulate_fleet(n_nodes: int = 4096, n_intervals: int = 1000,
     (:func:`~repro.core.traces.fleet_demand_traces`) and the whole
     fleet's Eq. 1 updates run batched.  Two engines:
 
-    * ``engine="lab"`` (default) -- delegate to the ScenarioLab sweep:
-      the entire horizon is one jitted ``lax.scan``, so the closed loop
-      costs a single XLA dispatch end to end.
+    * ``engine="lab"`` (default) -- delegate to the device-resident
+      ScenarioLab sweep: the entire horizon is one jitted ``lax.scan``
+      whose statistics stream through the scan carry (p99 via the
+      fixed-bin streaming quantile), so the closed loop costs a single
+      XLA dispatch end to end and O(1) bytes back to the host.
     * ``engine="python"`` -- the historical loop: one fused jitted step
       per interval, re-entering Python 10x per simulated second.  Kept
       as the baseline ``benchmarks/lab_bench.py`` measures against;

@@ -161,18 +161,28 @@ def vectorized_step(
     deadband: float = 0.0,
     v_prev: Optional[jax.Array] = None,
     feedforward: float = 0.0,
+    inv_total_memory: Optional[jax.Array] = None,
+    inv_r0: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Eq. 1 applied to ``N`` node controllers at once (jit/vmap friendly).
 
     Shapes: ``u``, ``v`` (and optional ``v_prev``) are ``(N,)``;
     ``total_memory`` / ``u_min`` / ``u_max`` broadcast against them.
+
+    ``inv_total_memory`` / ``inv_r0`` are optional precomputed
+    reciprocals for hot loops that step the law thousands of times per
+    trace (the sweep engine's scan): two divisions per interval become
+    multiplies by loop-invariant values.  Results differ from the
+    division path by at most 1 ulp; omit them anywhere latency doesn't
+    matter.
     """
     u = jnp.asarray(u, jnp.float32)
     v = jnp.asarray(v, jnp.float32)
     v_eff = v
     if feedforward > 0.0 and v_prev is not None:
         v_eff = v + feedforward * (v - jnp.asarray(v_prev, jnp.float32))
-    r = v_eff / total_memory
+    r = (v_eff * inv_total_memory if inv_total_memory is not None
+         else v_eff / total_memory)
     err = r - r0
     # Gain selection is resolved at trace time: ``lam_grant`` is a Python
     # constant, so the symmetric case jits to a single multiply and the
@@ -181,8 +191,15 @@ def vectorized_step(
         lam_eff = lam
     else:
         lam_eff = jnp.where(err < 0, lam_grant, lam)
-    delta = lam_eff * v_eff * err / r0
-    u_next = jnp.where(jnp.abs(err) <= deadband, u, u - delta)
+    scaled_err = err * inv_r0 if inv_r0 is not None else err / r0
+    delta = lam_eff * v_eff * scaled_err
+    if isinstance(deadband, (int, float)) and deadband == 0.0:
+        # Trace-time skip: with no deadband the hold branch can only
+        # trigger at err == 0, where delta is 0 anyway -- identical
+        # result, three fewer ops in the hot loop.
+        u_next = u - delta
+    else:
+        u_next = jnp.where(jnp.abs(err) <= deadband, u, u - delta)
     return jnp.clip(u_next, u_min, u_max)
 
 

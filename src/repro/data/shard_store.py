@@ -28,13 +28,22 @@ class Manifest:
 
 
 def write_corpus(path: str, *, n_shards: int, tokens_per_shard: int,
-                 vocab_size: int, seed: int = 0) -> Manifest:
-    """Generate a synthetic tokenized corpus (deterministic)."""
+                 vocab_size: int, seed: int = 0,
+                 zipf_exponent: float = 1.2) -> Manifest:
+    """Generate a synthetic tokenized corpus (deterministic).
+
+    Tokens are drawn from a Zipfian unigram distribution (real corpora
+    are Zipf-distributed; exponent ~1 for natural language).  A uniform
+    corpus (``zipf_exponent=0``) carries no learnable signal at all, so
+    a smoke-scale trainer run can't demonstrate a decreasing loss on it.
+    """
     os.makedirs(path, exist_ok=True)
     rng = np.random.default_rng(seed)
+    probs = 1.0 / np.arange(1, vocab_size + 1) ** zipf_exponent
+    probs /= probs.sum()
     for i in range(n_shards):
-        tokens = rng.integers(0, vocab_size, tokens_per_shard,
-                              dtype=np.int32)
+        tokens = rng.choice(vocab_size, size=tokens_per_shard,
+                            p=probs).astype(np.int32)
         tmp = os.path.join(path, f".tmp-shard-{i:05d}.npy")
         np.save(tmp, tokens)
         os.replace(tmp, os.path.join(path, f"shard-{i:05d}.npy"))

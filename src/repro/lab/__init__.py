@@ -8,13 +8,19 @@ program:
   fleet size, heterogeneity, burst/failure injection) + a registry of
   named scenarios (the paper's Sec. IV.A configs and beyond-paper
   stress shapes).
-* :mod:`.sweep`     -- the engine: demand compiled to ``(N, T)``, the
-  loop run as one jitted ``lax.scan`` over time, ``vmap``'d over a
-  :class:`GainSet` gain grid.
+* :mod:`.sweep`     -- the device-resident engine: demand compiled to
+  ``(N, T)``, the loop run as one jitted ``lax.scan`` over time,
+  ``vmap``'d over a :class:`GainSet`, optionally ``shard_map``'d over
+  devices along the gain axis.  Histories never reach the host: every
+  metric streams through the scan, and chunks transfer O(gains)
+  scalars.
 * :mod:`.score`     -- Figs. 5-8 analogue metrics (:class:`FleetStats`)
-  and scalar objectives, pure functions of sweep output.
-* :mod:`.tune`      -- grid/random gain search returning a tuned
-  :class:`~repro.core.control.ControllerParams`.
+  and scalar objectives, plus the streaming fixed-bin quantile and
+  Kahan reduction primitives the engine fuses into its scan.
+* :mod:`.tune`      -- gain search returning a tuned
+  :class:`~repro.core.control.ControllerParams`: exhaustive grid /
+  random, successive halving (:func:`halving_tune`), and
+  multi-scenario portfolio tuning (:func:`tune_portfolio`).
 
 Tuned presets surface through ``repro.configs.dynims.tuned_params`` and
 ``MemoryPlane.for_scenario``.
@@ -22,16 +28,22 @@ Tuned presets surface through ``repro.configs.dynims.tuned_params`` and
 
 from .scenarios import (ScenarioSpec, TRACE_FAMILIES, get_scenario,
                         list_scenarios, register_scenario)
-from .score import (FleetStats, OVER_R0_EPS, SETTLE_TOL, compute_fleet_stats,
-                    default_score, stats_to_dict)
-from .sweep import (DEFAULT_CHUNK, GainSet, SweepResult, run_sweep,
-                    sweep_demand)
-from .tune import TuneResult, grid_gains, random_gains, tune_gains
+from .score import (FleetStats, OVER_R0_EPS, QUANT_BINS, QUANT_LEVELS,
+                    QUANT_RANGE, SETTLE_TOL, compute_fleet_stats,
+                    default_score, finalize_fleet_stats, kahan_add,
+                    quantile_from_codes, stats_to_dict, utilization_codes)
+from .sweep import (CODES_BUDGET_BYTES, DEFAULT_CHUNK, GainSet, SweepResult,
+                    resolve_devices, run_sweep, sweep_demand)
+from .tune import (PortfolioResult, TuneResult, grid_gains, halving_tune,
+                   random_gains, tune_gains, tune_portfolio)
 
 __all__ = [
-    "DEFAULT_CHUNK", "FleetStats", "GainSet", "OVER_R0_EPS", "SETTLE_TOL",
-    "ScenarioSpec", "SweepResult", "TRACE_FAMILIES", "TuneResult",
-    "compute_fleet_stats", "default_score", "get_scenario", "grid_gains",
-    "list_scenarios", "random_gains", "register_scenario", "run_sweep",
-    "stats_to_dict", "sweep_demand", "tune_gains",
+    "CODES_BUDGET_BYTES", "DEFAULT_CHUNK", "FleetStats", "GainSet",
+    "OVER_R0_EPS", "PortfolioResult", "QUANT_BINS", "QUANT_LEVELS",
+    "QUANT_RANGE", "SETTLE_TOL", "ScenarioSpec", "SweepResult",
+    "TRACE_FAMILIES", "TuneResult", "compute_fleet_stats", "default_score",
+    "finalize_fleet_stats", "get_scenario", "grid_gains", "halving_tune",
+    "kahan_add", "list_scenarios", "quantile_from_codes", "random_gains",
+    "register_scenario", "resolve_devices", "run_sweep", "stats_to_dict",
+    "sweep_demand", "tune_gains", "tune_portfolio", "utilization_codes",
 ]

@@ -8,6 +8,20 @@ utilization, granted-capacity volume, settle time -- and is written in
 (it accepts plain numpy arrays equally, which is how the legacy
 Python-loop fleet sim and the tests call it).
 
+The device-resident sweep (``lab.sweep``) never materializes a history:
+it streams per-node accumulators through the scan (Kahan-compensated
+float32 sums -- the f32-clean reduction path) and estimates the p99
+with the **streaming fixed-bin quantile** primitives here: utilization
+is quantized to :data:`QUANT_BINS` fixed bins (``uint16`` codes over
+:data:`QUANT_RANGE`), and :func:`quantile_from_codes` extracts any
+quantile of the implicit histogram by bisecting the code space with
+count reductions -- O(1) state per bin boundary probed, O(gains)
+transfers, no sort and no scatter (both pathologically slow on XLA
+CPU; see ROADMAP).  Worst-case quantization error is
+``(hi - lo) / QUANT_BINS`` ~= 3e-5 utilization.
+:func:`finalize_fleet_stats` assembles a :class:`FleetStats` from the
+streamed accumulators so the metric *definitions* stay in this module.
+
 :func:`default_score` folds a :class:`FleetStats` into one scalar per
 gain point -- higher is better -- trading granted storage against
 pressure.  Tuning (``lab.tune``) maximizes it; swap in any callable
@@ -16,8 +30,9 @@ with the same signature for a different objective.
 
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional, Union
+from typing import Dict, NamedTuple, Optional, Tuple, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -31,6 +46,14 @@ OVER_R0_EPS = 1e-3
 # Settle band: the fleet has settled once its max utilization stays
 # within this margin above r0.
 SETTLE_TOL = 0.02
+
+# Streaming-quantile fixed-bin grid: utilization codes are uint16 over
+# [0, 2) -- ratios beyond 2x total memory saturate into the top bin
+# (far past the swap cliff; every scenario in the registry peaks well
+# below it).  65536 bins -> 3.05e-5 quantization granularity.
+QUANT_BINS = 65536
+QUANT_RANGE: Tuple[float, float] = (0.0, 2.0)
+_QUANT_SCALE = QUANT_BINS / (QUANT_RANGE[1] - QUANT_RANGE[0])
 
 
 class FleetStats(NamedTuple):
@@ -88,6 +111,117 @@ def compute_fleet_stats(
         capacity_std_gib=caps.std() / GiB,
         granted_volume_gib_s=caps.mean(axis=1).sum() * interval_s / GiB,
         settle_intervals=(last_bad + 1).astype(jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Streaming (device-resident) reductions
+# ---------------------------------------------------------------------------
+
+def kahan_add(total: Array, comp: Array, x: Array) -> Tuple[Array, Array]:
+    """One compensated-summation step: ``total + x`` carrying ``comp``.
+
+    Keeps long float32 accumulations (T x N closed-loop sums) at
+    O(eps) relative error instead of O(T * eps) -- the sweep engine's
+    f32-clean reduction path.  Elementwise, so XLA fuses it into the
+    scan body.
+    """
+    y = x - comp
+    t = total + y
+    return t, (t - total) - y
+
+
+def utilization_codes(utils: Array) -> Array:
+    """Quantize utilization ratios onto the fixed streaming-bin grid."""
+    lo, _ = QUANT_RANGE
+    idx = (jnp.asarray(utils, jnp.float32) - lo) * _QUANT_SCALE
+    return jnp.clip(idx, 0, QUANT_BINS - 1).astype(jnp.uint16)
+
+
+# Bisection depth of the streaming quantile: 12 levels resolve the
+# 2^16-bin code space to a 16-bin bracket, i.e. 2^-11 of QUANT_RANGE
+# (~5e-4 utilization worst case, ~2.4e-4 expected).  Each level is one
+# dense count reduction over the codes, so depth trades accuracy
+# against sweep throughput linearly; 16 recovers the exact (quantized)
+# order statistic.
+QUANT_LEVELS = 12
+
+
+def quantile_from_codes(codes: Array, q: float, n_total: int,
+                        levels: int = QUANT_LEVELS) -> Array:
+    """Quantile of the implicit fixed-bin histogram behind ``codes``.
+
+    ``codes`` is any-shape ``uint16`` (one code per closed-loop sample,
+    produced by :func:`utilization_codes`); the quantile is recovered
+    by bisecting the 2^16 code space -- ``levels`` count reductions,
+    each a dense compare-and-sum XLA fuses well (a scatter histogram or
+    an on-device sort is 10-40x slower on CPU backends).  Returns the
+    dequantized midpoint of the final bracket around the order
+    statistic at ``floor(q * (n_total - 1))`` (``np.quantile``'s lower
+    neighbour): error <= ``QUANT_RANGE`` span * 2^-(levels+1), plus
+    half a bin once ``levels`` hits 16.
+    """
+    target = jnp.int32(int(np.floor(q * (n_total - 1))))
+
+    # two-stage integer reduction: narrow partials along the last axis
+    # (int16 when < 32768 lanes) then one int32 fold
+    part_dtype = jnp.int16 if codes.shape[-1] < 2**15 else jnp.int32
+
+    def body(_, lo_hi):
+        lo, hi = lo_hi
+        mid = (lo + hi) >> 1
+        below = codes <= mid.astype(jnp.uint16)
+        count = below.sum(axis=-1, dtype=part_dtype).astype(jnp.int32).sum()
+        go_left = count > target
+        return (jnp.where(go_left, lo, mid + 1),
+                jnp.where(go_left, mid, hi))
+
+    lo, hi = jax.lax.fori_loop(0, min(levels, 16), body,
+                               (jnp.int32(0), jnp.int32(QUANT_BINS - 1)))
+    lo0, _hi0 = QUANT_RANGE
+    mid_code = (lo.astype(jnp.float32) + hi.astype(jnp.float32) + 1.0) * 0.5
+    return lo0 + mid_code / _QUANT_SCALE
+
+
+def finalize_fleet_stats(
+    *,
+    util_sum: Array,             # (N,) Kahan-compensated sum of r over T
+    util_max: Array,             # (N,) running max of r
+    caps_sum_gib: Array,         # (N,) Kahan-compensated sum of u / GiB
+    caps_sumsq_gib: Array,       # (N,) sum of (u / GiB)^2
+    over_r0_count: Array,        # (N,) int count of r > r0 + OVER_R0_EPS
+    violation_count: Array,      # (N,) int count of r > 1
+    last_bad: Array,             # (N,) int last t with r > r0 + SETTLE_TOL
+    p99_utilization: Array,      # scalar (from quantile_from_codes)
+    r0: Array,
+    n_intervals: int,
+    interval_s: float,
+) -> FleetStats:
+    """Assemble :class:`FleetStats` from streamed per-node accumulators.
+
+    The metric definitions (thresholds, units, settle semantics) match
+    :func:`compute_fleet_stats` on the dense history exactly; only the
+    reduction order differs (per-node lanes folded once at the end).
+    """
+    t = n_intervals
+    n = util_sum.shape[-1]
+    samples = t * n
+    caps_total = caps_sum_gib.sum()
+    caps_mean = caps_total / samples
+    caps_var = jnp.maximum(caps_sumsq_gib.sum() / samples
+                           - caps_mean * caps_mean, 0.0)
+    max_util = util_max.max()
+    return FleetStats(
+        mean_utilization=util_sum.sum() / samples,
+        p99_utilization=p99_utilization,
+        max_utilization=max_util,
+        frac_intervals_over_r0=over_r0_count.sum() / samples,
+        max_over_r0=jnp.clip(max_util - r0, 0.0, None),
+        pressure_violation_rate=violation_count.sum() / samples,
+        mean_capacity_gib=caps_mean,
+        capacity_std_gib=jnp.sqrt(caps_var),
+        granted_volume_gib_s=caps_total / n * interval_s,
+        settle_intervals=(last_bad.max() + 1).astype(jnp.int32),
     )
 
 

@@ -1,21 +1,35 @@
-"""The vectorized scenario-sweep engine.
+"""The vectorized, device-resident scenario-sweep engine.
 
 One compiled program runs thousands of closed-loop simulations: a
 scenario's demand traces are compiled to a dense ``(N, T)`` array, the
 full control loop (saturated store, Eq. 1 update, clamp) runs as a
 single jitted :func:`jax.lax.scan` over time, and that scan is
 ``vmap``'d over a :class:`GainSet` -- a whole gain grid advances in
-lockstep, one XLA dispatch for the entire sweep.  Contrast with the
-historical fleet sim (``cluster_sim.simulate_fleet(engine="python")``),
-which re-entered Python to dispatch its jitted step once per interval;
-``benchmarks/lab_bench.py`` measures the gap in
-node*interval*config throughput.
+lockstep, one XLA dispatch per gain chunk.
 
-Gain chunks bound peak memory: each jitted call reduces its
-``(chunk, T, N)`` histories to :class:`~repro.lab.score.FleetStats`,
-materializing only the utilization history (for the host-side p99
-selection), so sweeping a 4096-node scenario over hundreds of gain
-points stays within a few hundred MB.
+Closed-loop histories never leave the device.  Every
+:class:`~repro.lab.score.FleetStats` metric streams through the scan
+carry as per-node accumulators (Kahan-compensated float32 sums -- see
+:func:`~repro.lab.score.kahan_add`), and the p99 comes from the
+streaming fixed-bin quantile (:mod:`~repro.lab.score`): utilization is
+quantized to ``uint16`` codes on a 65536-bin grid and the quantile is
+bisected out of the implicit histogram with 16 count reductions.  Each
+chunk therefore transfers O(G) scalars to the host -- the historical
+engine shipped the full ``(G, T, N)`` utilization history back for a
+numpy p99 (128 MB per 8-gain chunk at fleet scale), which capped chunk
+size and serialized every chunk behind a host sync.  Chunks are now
+dispatched asynchronously and collected once at the end.
+
+The gain axis also shards across devices: ``sweep_demand(...,
+devices=...)`` (auto-detected by default) runs each device's slice of
+the chunk under ``shard_map`` over a 1-D ``("gains",)`` mesh; demand is
+replicated, gains are split, and no collectives are needed.  With a
+single device the plain jitted path is taken and results are
+bit-identical to the sharded one (each gain's program is unchanged).
+
+Gain chunks bound peak *device* memory (the uint16 code history is
+``chunk x T x N x 2`` bytes); ``chunk=None`` picks the largest chunk
+within :data:`CODES_BUDGET_BYTES`.
 """
 
 from __future__ import annotations
@@ -23,17 +37,29 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Optional, Sequence, Union
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:                                    # jax >= 0.5 exposes it at top level
+    _shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 from ..core.control import ControllerParams, vectorized_step
+from ..core.traces import GiB
 from .scenarios import ScenarioSpec, get_scenario
-from .score import FleetStats, compute_fleet_stats, default_score
+from .score import (FleetStats, OVER_R0_EPS, SETTLE_TOL, default_score,
+                    finalize_fleet_stats, kahan_add, quantile_from_codes,
+                    utilization_codes)
 
-DEFAULT_CHUNK = 8
+# Upper bound on gains per compiled chunk; the auto-chunk logic lowers
+# it when the per-gain uint16 code history would blow the budget.
+DEFAULT_CHUNK = 32
+CODES_BUDGET_BYTES = 256 << 20
 
 
 # ---------------------------------------------------------------------------
@@ -113,53 +139,132 @@ class GainSet:
         return GainSet(*(getattr(self, f.name)[lo:hi]
                          for f in dataclasses.fields(self)))
 
+    def take(self, idx: Sequence[int]) -> "GainSet":
+        """Gather gain points by index (survivor promotion in halving)."""
+        idx = np.asarray(idx, dtype=np.int64)
+        return GainSet(*(getattr(self, f.name)[idx]
+                         for f in dataclasses.fields(self)))
+
 
 # ---------------------------------------------------------------------------
-# The compiled sweep
+# The compiled chunk: streaming closed loop, one gain
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("interval_s", "occupancy"))
-def _sweep_chunk(demand_tn, m, r0, lam, lam_grant, u_min, u_max, deadband,
-                 feedforward, *, interval_s: float, occupancy: float):
-    """Closed loop for one gain chunk: scan over T, vmap over gains.
+def _one_gain_stream(demand_tn, m, inv_m, r0_g, lam_g, lam_grant_g, u_min_g,
+                     u_max_g, db_g, ff_g, interval_s, occupancy, *,
+                     paper_law: bool, unit_occupancy: bool,
+                     static_bounds: Optional[Tuple[float, float]]):
+    """Closed loop for one gain point, fully streamed.
 
-    ``demand_tn`` is ``(T, N)`` bytes (shared by every gain point),
-    ``m`` is ``(N,)`` bytes, gain arrays are ``(G,)``.  Returns
-    ``(stats, utils)``: :class:`FleetStats` with ``(G,)`` fields (p99
-    zero-filled -- the caller computes it host-side, where numpy's
-    selection beats XLA's CPU sort ~40x) plus the ``(G, T, N)``
-    utilization history it needs to do so.  Capacity histories never
-    leave the jitted computation.
+    The scan carry holds only per-node accumulators (O(N) state); the
+    sole scan output is the uint16 utilization code history consumed by
+    the in-program quantile bisection.  Nothing of size T x N is ever
+    staged for the host.
+
+    ``paper_law`` / ``unit_occupancy`` / ``static_bounds`` are
+    trace-time specializations (set by :func:`sweep_demand` after
+    inspecting the whole gain set): when every gain point is
+    paper-faithful -- symmetric gains, no deadband, no feedforward --
+    the slope state, the gain select and the hold branch drop out of
+    the hot loop entirely, and a gain set with uniform capacity bounds
+    clamps against compile-time constants instead of broadcast traced
+    scalars.  All paths produce identical results for parameters the
+    faster path admits.
     """
-    demand_tn = jnp.asarray(demand_tn, jnp.float32)
-    m = jnp.asarray(m, jnp.float32)
+    n_steps, n_nodes = demand_tn.shape
+    if static_bounds is not None:
+        u_min_g, u_max_g = static_bounds
+    u0 = jnp.full((n_nodes,), u_max_g, jnp.float32)
+    zeros = jnp.zeros((n_nodes,), jnp.float32)
+    # per-node event counters: int16 lanes (2x the SIMD width) whenever
+    # the horizon cannot overflow them
+    cnt_dtype = jnp.int16 if n_steps < 2**15 else jnp.int32
+    izeros = jnp.zeros((n_nodes,), cnt_dtype)
+    # Hoisted loop invariants: two reciprocals turn the law's divisions
+    # into multiplies for the T-step scan, and the threshold sums leave
+    # the hot path entirely.
+    inv_r0_g = 1.0 / r0_g
+    thr_over = r0_g + OVER_R0_EPS
+    thr_settle = r0_g + SETTLE_TOL
+    inv_gib = jnp.float32(1.0 / GiB)
 
-    def one_gain(r0_g, lam_g, lam_grant_g, u_min_g, u_max_g, db_g, ff_g):
-        u0 = jnp.full(demand_tn.shape[1:], u_max_g, jnp.float32)
-        # Seed v_prev with the first interval's usage so the slope term
-        # is exactly zero before there is a previous observation
-        # (matching the scalar loop's v_prev=None first step).
-        v_prev0 = demand_tn[0] + occupancy * u0
+    def saturated_usage(u, d):
+        return d + u if unit_occupancy else d + occupancy * u
 
-        def step(carry, d):
-            u, v_prev = carry
-            v = d + occupancy * u                          # saturated store
+    def step(carry, d):
+        if paper_law:
+            (u, us, us_c, cs, cs_c, c2, mx, n_r0, n_viol, last_bad,
+             t) = carry
+            v = saturated_usage(u, d)                  # saturated store
+            v_eff = v
+        else:
+            (u, v_prev, us, us_c, cs, cs_c, c2, mx, n_r0, n_viol, last_bad,
+             t) = carry
+            v = saturated_usage(u, d)                  # saturated store
             # ``vectorized_step``'s own feedforward branch is resolved
             # at trace time from a Python float, which a vmapped gain
             # axis cannot feed; applying it to v up front is identical
             # (the law uses v_eff everywhere v appears).
             v_eff = v + ff_g * (v - v_prev)
-            u_next = vectorized_step(
-                u, v_eff, total_memory=m, r0=r0_g, lam=lam_g,
-                u_min=u_min_g, u_max=u_max_g, lam_grant=lam_grant_g,
-                deadband=db_g)
-            return (u_next, v), (v / m, u_next)
+        u_next = vectorized_step(
+            u, v_eff, total_memory=m, r0=r0_g, lam=lam_g,
+            u_min=u_min_g, u_max=u_max_g,
+            lam_grant=None if paper_law else lam_grant_g,
+            deadband=0.0 if paper_law else db_g,
+            inv_total_memory=inv_m, inv_r0=inv_r0_g)
+        r = v * inv_m
+        us, us_c = kahan_add(us, us_c, r)
+        cap_gib = u_next * inv_gib
+        cs, cs_c = kahan_add(cs, cs_c, cap_gib)
+        c2 = c2 + cap_gib * cap_gib
+        mx = jnp.maximum(mx, r)
+        n_r0 = n_r0 + (r > thr_over)
+        n_viol = n_viol + (r > 1.0)
+        last_bad = jnp.where(r > thr_settle, t, last_bad)
+        tail = (us, us_c, cs, cs_c, c2, mx, n_r0, n_viol, last_bad, t + 1)
+        head = (u_next,) if paper_law else (u_next, v)
+        return head + tail, utilization_codes(r)
 
-        _, (utils, caps) = jax.lax.scan(step, (u0, v_prev0), demand_tn)
-        stats = compute_fleet_stats(utils, caps, r0=r0_g,
-                                    interval_s=interval_s,
-                                    p99_utilization=jnp.zeros(()))
-        return stats, utils
+    acc0 = (zeros, zeros, zeros, zeros, zeros, zeros, izeros, izeros,
+            jnp.full((n_nodes,), -1, jnp.int32), jnp.int32(0))
+    if paper_law:
+        init = (u0,) + acc0
+    else:
+        # Seed v_prev with the first interval's usage so the slope term
+        # is exactly zero before there is a previous observation
+        # (matching the scalar loop's v_prev=None first step).
+        init = (u0, saturated_usage(u0, demand_tn[0])) + acc0
+    carry, codes = jax.lax.scan(step, init, demand_tn, unroll=2)
+    (us, _, cs, _, c2, mx, n_r0, n_viol, last_bad, _) = carry[-10:]
+    p99 = quantile_from_codes(codes, 0.99, n_steps * n_nodes)
+    return finalize_fleet_stats(
+        util_sum=us, util_max=mx, caps_sum_gib=cs, caps_sumsq_gib=c2,
+        over_r0_count=n_r0, violation_count=n_viol, last_bad=last_bad,
+        p99_utilization=p99, r0=r0_g, n_intervals=n_steps,
+        interval_s=interval_s)
+
+
+def _chunk_stats(demand_tn, m, r0, lam, lam_grant, u_min, u_max, deadband,
+                 feedforward, interval_s, occupancy, *, paper_law: bool,
+                 unit_occupancy: bool,
+                 static_bounds: Optional[Tuple[float, float]]):
+    """One gain chunk: scan over T, vmap over gains -> (G,)-field stats.
+
+    ``demand_tn`` is ``(T, N)`` bytes (shared by every gain point),
+    ``m`` is ``(N,)`` bytes, gain arrays are ``(G,)``; ``interval_s``
+    and ``occupancy`` ride along as traced scalars so every
+    (chunk, T, specialization) tuple maps to exactly one executable.
+    """
+    demand_tn = jnp.asarray(demand_tn, jnp.float32)
+    m = jnp.asarray(m, jnp.float32)
+    inv_m = 1.0 / m
+
+    def one_gain(r0_g, lam_g, lam_grant_g, u_min_g, u_max_g, db_g, ff_g):
+        return _one_gain_stream(demand_tn, m, inv_m, r0_g, lam_g,
+                                lam_grant_g, u_min_g, u_max_g, db_g, ff_g,
+                                interval_s, occupancy, paper_law=paper_law,
+                                unit_occupancy=unit_occupancy,
+                                static_bounds=static_bounds)
 
     return jax.vmap(one_gain)(
         jnp.asarray(r0, jnp.float32), jnp.asarray(lam, jnp.float32),
@@ -169,6 +274,70 @@ def _sweep_chunk(demand_tn, m, r0, lam, lam_grant, u_min, u_max, deadband,
         jnp.asarray(feedforward, jnp.float32))
 
 
+@functools.lru_cache(maxsize=None)
+def _compiled_sweep(devices: Tuple, paper_law: bool, unit_occupancy: bool,
+                    static_bounds: Optional[Tuple[float, float]]):
+    """Jitted chunk program for a device tuple (sharded when > 1).
+
+    The gain axis is split over a 1-D ``("gains",)`` mesh with
+    ``shard_map``; demand and node memory replicate.  Per-gain programs
+    are identical to the single-device path, so sharding changes only
+    placement, not results.
+    """
+    fn = functools.partial(_chunk_stats, paper_law=paper_law,
+                           unit_occupancy=unit_occupancy,
+                           static_bounds=static_bounds)
+    if len(devices) <= 1:
+        return jax.jit(fn)
+    mesh = Mesh(np.asarray(devices), ("gains",))
+    gains_specs = (P("gains"),) * 7
+    mapped = _shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(None, None), P(None)) + gains_specs + (P(), P()),
+        out_specs=P("gains"),
+        check_rep=False)
+    return jax.jit(mapped)
+
+
+def resolve_devices(devices: Union[None, int, Sequence] = None) -> Tuple:
+    """Normalize the ``devices`` knob to a tuple of jax devices.
+
+    ``None`` auto-detects every local device; an int takes the first
+    ``n``; an explicit sequence is used as given.
+    """
+    if devices is None:
+        return tuple(jax.local_devices())
+    if isinstance(devices, int):
+        local = jax.local_devices()
+        if not 1 <= devices <= len(local):
+            raise ValueError(f"devices={devices} but only {len(local)} "
+                             "local devices exist")
+        return tuple(local[:devices])
+    return tuple(devices)
+
+
+def _resolve_chunk(chunk: Optional[int], n_gains: int, n_steps: int,
+                   n_nodes: int, n_dev: int) -> int:
+    """Gains per compiled call: memory-capped, device-divisible.
+
+    The auto chunk never exceeds the code budget -- a huge (T, N)
+    shape degrades to one gain per call rather than overshooting
+    device memory.
+    """
+    if chunk is None:
+        per_gain = max(n_steps * n_nodes * 2, 1)       # uint16 codes
+        chunk = min(max(int(CODES_BUDGET_BYTES // per_gain), 1),
+                    DEFAULT_CHUNK)
+    chunk = max(int(chunk), 1)
+    chunk = min(chunk, max(n_gains, 1))
+    # round up so every device holds the same number of gain points
+    return -(-chunk // n_dev) * n_dev
+
+
+# ---------------------------------------------------------------------------
+# The sweep driver
+# ---------------------------------------------------------------------------
+
 def sweep_demand(
     demand: np.ndarray,
     gains: GainSet,
@@ -176,41 +345,61 @@ def sweep_demand(
     node_memory: Union[float, np.ndarray],
     interval_s: float = 0.1,
     occupancy: float = 1.0,
-    chunk: int = DEFAULT_CHUNK,
+    chunk: Optional[int] = None,
+    devices: Union[None, int, Sequence] = None,
 ) -> FleetStats:
     """Sweep a raw ``(N, T)`` demand matrix over every gain point.
 
     The low-level entry: :func:`run_sweep` compiles a scenario down to
     this, and ``cluster_sim.simulate_fleet`` feeds it the historical
     fleet workload directly.  Returns ``(G,)``-field stats as numpy.
+
+    Every chunk is dispatched before any result is collected, so on an
+    asynchronous backend chunk k+1 computes while chunk k's (G,)-scalar
+    stats drain.  ``devices`` shards the gain axis (see module docs);
+    chunking and sharding are implementation details -- stats are
+    independent of both.
     """
     demand = np.asarray(demand)
-    n_nodes = demand.shape[0]
+    n_nodes, n_steps = demand.shape
     demand_tn = np.ascontiguousarray(demand.T, dtype=np.float32)
     m = np.broadcast_to(np.asarray(node_memory, np.float64),
                         (n_nodes,)).astype(np.float32)
-    chunk = max(chunk, 1)
+    devs = resolve_devices(devices)
+    chunk = _resolve_chunk(chunk, len(gains), n_steps, n_nodes, len(devs))
     # Pad the ragged tail up to the chunk width (repeating the last gain)
-    # so every call hits the same shape-specialized jit executable; the
+    # so every call hits the same shape-specialized executable; the
     # padded rows' stats are sliced off below.
     n_real = len(gains)
-    if n_real > chunk and n_real % chunk:
+    if n_real % chunk:
         pad = GainSet(*(np.repeat(getattr(gains, f.name)[-1:],
                                   chunk - n_real % chunk)
                         for f in dataclasses.fields(GainSet)))
         gains = gains.concat(pad)
-    chunks = []
+    # Trace-time specialization: with a fully paper-faithful gain set
+    # (symmetric gains, zero deadband, zero feedforward) the hot loop
+    # sheds the slope state and both law branches -- the common case
+    # (default grids, every registry preset) runs ~2x faster.
+    paper_law = bool(np.all(gains.feedforward == 0.0)
+                     and np.all(gains.deadband == 0.0)
+                     and np.all(gains.lam_grant == gains.lam))
+    unit_occupancy = float(occupancy) == 1.0
+    static_bounds = None
+    if np.unique(gains.u_min).size == 1 and np.unique(gains.u_max).size == 1:
+        static_bounds = (float(gains.u_min[0]), float(gains.u_max[0]))
+    fn = _compiled_sweep(devs, paper_law, unit_occupancy, static_bounds)
+    iv = np.float32(interval_s)
+    occ = np.float32(occupancy)
+    # one host->device transfer of the shared arrays, not one per chunk
+    demand_dev = jnp.asarray(demand_tn)
+    m_dev = jnp.asarray(m)
+    pending = []
     for lo in range(0, len(gains), chunk):
         g = gains.slice(lo, lo + chunk)
-        stats, utils = _sweep_chunk(
-            demand_tn, m, g.r0, g.lam, g.lam_grant, g.u_min, g.u_max,
-            g.deadband, g.feedforward,
-            interval_s=float(interval_s), occupancy=float(occupancy))
-        stats = jax.tree_util.tree_map(np.asarray, stats)
-        utils = np.asarray(utils)
-        p99 = np.array([np.quantile(utils[i], 0.99)
-                        for i in range(utils.shape[0])], utils.dtype)
-        chunks.append(stats._replace(p99_utilization=p99))
+        pending.append(fn(demand_dev, m_dev, g.r0, g.lam, g.lam_grant,
+                          g.u_min, g.u_max, g.deadband, g.feedforward,
+                          iv, occ))
+    chunks = [jax.tree_util.tree_map(np.asarray, st) for st in pending]
     return FleetStats(*(np.concatenate([getattr(c, f)
                                         for c in chunks])[:n_real]
                         for f in FleetStats._fields))
@@ -253,22 +442,32 @@ def run_sweep(
     gains: GainSet,
     *,
     seed: int = 0,
-    chunk: int = DEFAULT_CHUNK,
+    chunk: Optional[int] = None,
     node_memory: Optional[Union[float, np.ndarray]] = None,
+    devices: Union[None, int, Sequence] = None,
+    horizon: Optional[int] = None,
 ) -> SweepResult:
     """Compile ``scenario`` and run its closed loop over every gain.
 
     ``node_memory`` overrides the scenario's per-node budget (bytes);
     by default the spec's (possibly jittered) fleet memory is used.
+    ``horizon`` truncates the closed loop to the scenario's first
+    ``horizon`` intervals -- the successive-halving tuner scores cheap
+    prefix rounds with it while reusing the same demand compilation.
     """
     spec = get_scenario(scenario)
     demand = spec.build_demand(seed=seed)
+    if horizon is not None:
+        if not 1 <= horizon <= spec.n_intervals:
+            raise ValueError(f"horizon must be in [1, {spec.n_intervals}]")
+        demand = demand[:, :horizon]
+        spec = spec.replace(n_intervals=horizon)
     m = spec.build_node_memory(seed=seed) if node_memory is None \
         else node_memory
     t0 = time.perf_counter()
     stats = sweep_demand(
         demand, gains, node_memory=m, interval_s=spec.interval_s,
-        occupancy=spec.occupancy, chunk=chunk)
+        occupancy=spec.occupancy, chunk=chunk, devices=devices)
     elapsed = time.perf_counter() - t0
     return SweepResult(scenario=spec, gains=gains, stats=stats, seed=seed,
                        elapsed_s=elapsed)

@@ -33,25 +33,25 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
 
     from ..configs import get_config, get_shape
     from ..launch.cells import CellSettings, build_cell, cell_settings
-    from ..launch.mesh import describe, make_production_mesh
+    from ..launch.mesh import activate_mesh, describe, make_production_mesh
     from ..roofline.analysis import analyze_compiled
 
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
-    jax.set_mesh(mesh)
-    st = cell_settings(arch, shape)
-    if settings_override:
-        import dataclasses
-        st = dataclasses.replace(st, **settings_override)
-    fn, inputs, desc = build_cell(arch, shape, mesh, settings=st)
-    desc["mesh"] = describe(mesh)
-    desc["multi_pod"] = multi_pod
+    with activate_mesh(mesh):
+        st = cell_settings(arch, shape)
+        if settings_override:
+            import dataclasses
+            st = dataclasses.replace(st, **settings_override)
+        fn, inputs, desc = build_cell(arch, shape, mesh, settings=st)
+        desc["mesh"] = describe(mesh)
+        desc["multi_pod"] = multi_pod
 
-    donate = getattr(fn, "donate_argnums", ())
-    lowered = jax.jit(fn, donate_argnums=donate).lower(*inputs)
-    t_lower = time.time() - t0
-    compiled = lowered.compile()
-    t_compile = time.time() - t0 - t_lower
+        donate = getattr(fn, "donate_argnums", ())
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*inputs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
 
     n_chips = int(mesh.devices.size)
     hlo_text = compiled.as_text()

@@ -14,9 +14,26 @@ Mesh semantics (DESIGN.md §4):
 
 from __future__ import annotations
 
+import contextlib
 from typing import Optional, Sequence, Tuple
 
 import jax
+
+
+def activate_mesh(mesh):
+    """Context manager making ``mesh`` the ambient mesh.
+
+    ``jax.set_mesh`` only exists on newer jax (where it both sets the
+    mesh and returns a context manager restoring the previous one); on
+    older releases (<= 0.4.x) entering the ``Mesh`` context manager
+    provides the same ambient-mesh semantics (bare ``PartitionSpec``
+    sharding constraints resolve against it) for the duration of the
+    block.  Either way the mesh is only ambient inside the ``with``.
+    """
+    if hasattr(jax, "set_mesh"):
+        ctx = jax.set_mesh(mesh)
+        return ctx if ctx is not None else contextlib.nullcontext(mesh)
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):

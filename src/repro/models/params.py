@@ -143,17 +143,37 @@ def shard_act(x: jax.Array, spec: P) -> jax.Array:
     all-gather, the canonical FSDP schedule.
     """
     try:
-        from jax._src.mesh import get_abstract_mesh
-        mesh = get_abstract_mesh()
-        if not mesh.axis_names:
+        names = _ambient_axis_names()
+        if not names:
             return x
         needed = {a for part in spec if part for a in
                   ((part,) if isinstance(part, str) else part)}
-        if not needed.issubset(set(mesh.axis_names)):
+        if not needed.issubset(set(names)):
             return x
         return jax.lax.with_sharding_constraint(x, spec)
     except Exception:
         return x
+
+
+def _ambient_axis_names() -> tuple:
+    """Axis names of whichever ambient mesh is active, if any.
+
+    Newer jax exposes the abstract mesh set by ``jax.set_mesh``; on
+    older releases the ``with mesh:`` context manager populates the
+    legacy thread-resources env instead -- check both so activation
+    pinning works under either idiom.
+    """
+    from jax._src import mesh as mesh_lib
+    try:
+        names = tuple(mesh_lib.get_abstract_mesh().axis_names)
+        if names:
+            return names
+    except Exception:
+        pass
+    try:
+        return tuple(mesh_lib.thread_resources.env.physical_mesh.axis_names)
+    except Exception:
+        return ()
 
 
 def axes_for(mesh) -> Axes:

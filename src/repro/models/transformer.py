@@ -206,9 +206,18 @@ class Model:
         return logits, aux
 
     def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """CE + aux losses.  ``batch["labels"]``, when present, is already
+        position-aligned (``labels[i]`` is the target for position ``i`` --
+        the pipeline emits next-token labels); only the ``tokens`` fallback
+        needs the one-position shift.  Shifting provided labels again would
+        silently train a predict-two-ahead objective.
+        """
         logits, aux = self.forward(params, batch)
-        labels = batch.get("labels", batch["tokens"])
-        ce = cross_entropy(logits[:, :-1], labels[:, 1:])
+        labels = batch.get("labels")
+        if labels is None:
+            ce = cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+        else:
+            ce = cross_entropy(logits, labels)
         return ce + aux, {"ce": ce, "aux": aux}
 
     # ---- attention plumbing ---------------------------------------------------

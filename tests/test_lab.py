@@ -75,6 +75,20 @@ PARITY_KEYS = ("mean_utilization", "p99_utilization", "max_utilization",
                "mean_capacity_gib", "capacity_std_gib",
                "frac_intervals_over_r0", "max_over_r0")
 
+# The device-resident engine estimates p99 with the streaming fixed-bin
+# quantile (12-level bisection over 65536 bins): worst-case bracket
+# error is QUANT_RANGE span * 2^-13 ~= 2.4e-4 plus half a bin, so p99
+# gets its own parity tolerance; every other metric stays exact to
+# float32 ulps.
+P99_ATOL = 5e-4
+
+
+def assert_engine_parity(lab, ref):
+    for k in PARITY_KEYS:
+        atol = P99_ATOL if k == "p99_utilization" else 1e-5
+        np.testing.assert_allclose(lab[k], ref[k], rtol=1e-4, atol=atol,
+                                   err_msg=k)
+
 
 def test_sweep_parity_with_python_fleet_sim():
     """A 1-gain, paper-config sweep reproduces simulate_fleet's stability
@@ -82,9 +96,7 @@ def test_sweep_parity_with_python_fleet_sim():
     ref = simulate_fleet(n_nodes=128, n_intervals=400, seed=2,
                          engine="python")
     lab = simulate_fleet(n_nodes=128, n_intervals=400, seed=2, engine="lab")
-    for k in PARITY_KEYS:
-        np.testing.assert_allclose(lab[k], ref[k], rtol=1e-4, atol=1e-5,
-                                   err_msg=k)
+    assert_engine_parity(lab, ref)
 
 
 def test_engine_parity_beyond_paper_knobs():
@@ -94,9 +106,7 @@ def test_engine_parity_beyond_paper_knobs():
                                 feedforward=0.5)
     ref = simulate_fleet(48, 200, seed=5, params=p, engine="python")
     lab = simulate_fleet(48, 200, seed=5, params=p, engine="lab")
-    for k in PARITY_KEYS:
-        np.testing.assert_allclose(lab[k], ref[k], rtol=1e-4, atol=1e-5,
-                                   err_msg=k)
+    assert_engine_parity(lab, ref)
 
 
 def test_sweep_demand_matches_direct_gainset_call():
@@ -108,7 +118,8 @@ def test_sweep_demand_matches_direct_gainset_call():
                          engine="python")
     assert stats.mean_utilization.shape == (1,)
     np.testing.assert_allclose(float(stats.p99_utilization[0]),
-                               ref["p99_utilization"], rtol=1e-4)
+                               ref["p99_utilization"], rtol=1e-4,
+                               atol=P99_ATOL)
 
 
 def test_sweep_chunking_invariant():

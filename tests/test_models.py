@@ -30,7 +30,7 @@ def make_batch(cfg, b=2, s=16):
         batch["images"] = jnp.asarray(
             RNG.normal(0, 1, (b, cfg.vision_tokens, cfg.d_model)),
             jnp.float32)
-    batch["labels"] = batch["tokens"]
+    # no "labels" key: loss exercises the shifted-tokens fallback path
     return batch
 
 

@@ -46,11 +46,10 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json, sys
 import jax
 from repro.launch.cells import CellSettings, build_cell
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import activate_mesh, make_mesh
 from repro.roofline.analysis import analyze_compiled
 
 mesh = make_mesh((4, 2), ("data", "model"))
-jax.set_mesh(mesh)
 out = {}
 for arch, shape in [("llama3.2-1b-smoke", "train_4k"),
                     ("llama3.2-1b-smoke", "prefill_32k"),
@@ -62,10 +61,11 @@ for arch, shape in [("llama3.2-1b-smoke", "train_4k"),
     small = dataclasses.replace(shp, seq_len=64, global_batch=8)
     B_SHAPES = dict(B.SHAPES); B.SHAPES[shape] = small
     try:
-        fn, inputs, desc = build_cell(arch, shape, mesh,
-                                      settings=CellSettings(microbatches=2 if shp.kind == "train" else 1,
-                                                            attn_impl="dense"))
-        compiled = jax.jit(fn).lower(*inputs).compile()
+        with activate_mesh(mesh):
+            fn, inputs, desc = build_cell(arch, shape, mesh,
+                                          settings=CellSettings(microbatches=2 if shp.kind == "train" else 1,
+                                                                attn_impl="dense"))
+            compiled = jax.jit(fn).lower(*inputs).compile()
         r = analyze_compiled(compiled, desc, 8)
         out[shape] = {"flops": r["hlo_flops_per_chip"],
                       "dominant": r["roofline"]["dominant"]}
