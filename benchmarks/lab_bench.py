@@ -10,6 +10,10 @@ Table I gains) across engines and knobs:
 * ``lab_sweep_G``  -- the device-resident engine amortized over a
   G-point gain grid: histories never leave the device (streamed stats
   + fixed-bin quantile bisection), O(G) bytes per chunk to the host.
+* ``lab_sweep_cache_G`` -- the same sweep with CacheLoop enabled
+  (resident set, hit curve, evict/refill flux, modeled app runtime in
+  the scan carry): the cache-dynamics overhead over the saturated
+  store.
 
 The figure of merit is **node*interval*config closed-loop updates per
 second**.  Writes two artifacts at the repo root:
@@ -104,6 +108,13 @@ def bench_engines(n_nodes: int, n_intervals: int, n_configs: int,
         f"lab_sweep_{len(gains)}", n_nodes, n_intervals, len(gains),
         _best(lambda: sweep_demand(demand, gains, node_memory=p.total_memory,
                                    interval_s=p.interval_s))))
+    # CacheLoop overhead: same grid with cache dynamics in the carry.
+    from repro.lab import get_scenario
+    cache = get_scenario("spark-iterative-cache").cache
+    rows.append(_row(
+        f"lab_sweep_cache_{len(gains)}", n_nodes, n_intervals, len(gains),
+        _best(lambda: sweep_demand(demand, gains, node_memory=p.total_memory,
+                                   interval_s=p.interval_s, cache=cache))))
     base = rows[0]["throughput_upd_per_s"]
     for r in rows:
         r["speedup_vs_python_loop"] = r["throughput_upd_per_s"] / base
@@ -218,24 +229,33 @@ def bench_time_to_best(scenario: str = "swap-storm", budget: int = 64,
 
 def check_baseline(smoke_rows: list, baseline_path: str,
                    max_regress: float) -> int:
-    """Compare the smoke sweep speedup against the checked-in one."""
+    """Compare the smoke sweep speedups against the checked-in ones.
+
+    Every ``lab_sweep*`` row present in both runs is gated (the
+    cache-off sweep AND the CacheLoop sweep), each normalized by its
+    own run's ``python_loop`` row so runner speed cancels.
+    """
     with open(baseline_path) as fh:
         doc = json.load(fh)
     ref_rows = doc.get("smoke_reference") or []
     ref = {r["engine"]: r for r in ref_rows}
     now = {r["engine"]: r for r in smoke_rows}
-    sweep_name = next((n for n in now if n.startswith("lab_sweep")), None)
-    if sweep_name is None or sweep_name not in ref:
+    names = [n for n in now if n.startswith("lab_sweep") and n in ref]
+    if not names:
         print(f"# no comparable smoke_reference sweep row in "
               f"{baseline_path}; nothing to check")
         return 0
-    ref_ratio = ref[sweep_name]["speedup_vs_python_loop"]
-    now_ratio = now[sweep_name]["speedup_vs_python_loop"]
-    floor = ref_ratio * (1.0 - max_regress)
-    verdict = "OK" if now_ratio >= floor else "REGRESSION"
-    print(f"# sweep speedup vs python_loop: now {now_ratio:.2f}x, "
-          f"baseline {ref_ratio:.2f}x, floor {floor:.2f}x -> {verdict}")
-    return 0 if now_ratio >= floor else 1
+    failed = False
+    for name in names:
+        ref_ratio = ref[name]["speedup_vs_python_loop"]
+        now_ratio = now[name]["speedup_vs_python_loop"]
+        floor = ref_ratio * (1.0 - max_regress)
+        ok = now_ratio >= floor
+        failed |= not ok
+        print(f"# {name} speedup vs python_loop: now {now_ratio:.2f}x, "
+              f"baseline {ref_ratio:.2f}x, floor {floor:.2f}x -> "
+              f"{'OK' if ok else 'REGRESSION'}")
+    return 1 if failed else 0
 
 
 def print_rows(title: str, rows: list) -> None:

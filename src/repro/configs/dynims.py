@@ -24,20 +24,41 @@ PAPER_TABLE_I = ControllerParams(
 
 
 # ScenarioLab-tuned gains per named scenario (see ``repro.lab``): the
-# argmax of a 10x10 lam x r0 grid sweep under ``lab.score.default_score``
-# at seed 0.  Regenerate with ``examples/tune_gains.py --all``.  The
-# common shape -- gains well above the paper's 0.5 -- is the lab's first
-# finding: under recurring bursts, reclaim speed buys more than the
-# smoothness Table I optimizes for.
+# argmax of the default widened grid (a paper-law 9x9 lam x r0 plane
+# plus the beyond-paper law variants: asymmetric grant, deadband,
+# feedforward) at budget=100, seed 0.  Stability scenarios tune under
+# ``lab.score.default_score``; the CacheLoop scenarios tune under
+# ``lab.score.runtime_score`` (modeled app runtime, the paper's
+# headline metric) -- see LAB_TUNED_OBJECTIVES.  Regenerate with
+# ``examples/tune_gains.py --all``.  Two lab findings: reclaim speed
+# buys more than Table I's smoothness under recurring bursts (gains
+# ~3x the paper's 0.5), and on three of four stress scenarios the
+# *asymmetric* law wins -- reclaim near-critically (lam=1.6) but grant
+# gently (lam_grant=0.25), which burns less headroom re-granting into
+# the next burst.
 LAB_TUNED: Dict[str, ControllerParams] = {
-    # KV-admission waves: track bursts tightly with a near-critical gain.
-    "bursty-serving": PAPER_TABLE_I.replace(r0=0.9578, lam=1.8),
-    # Demand bursts past M: concede headroom (low r0), reclaim fast.
-    "swap-storm": PAPER_TABLE_I.replace(r0=0.8911, lam=1.0444),
-    # Mixed hardware: paper r0 but ~3x the paper gain.
-    "hetero-fleet": PAPER_TABLE_I.replace(r0=0.9578, lam=1.4222),
+    # KV-admission waves: reclaim hard, re-grant softly between waves.
+    "bursty-serving": PAPER_TABLE_I.replace(r0=0.935, lam=1.6,
+                                            lam_grant=0.25),
+    # Demand bursts past M: concede headroom (low r0), asymmetric law.
+    "swap-storm": PAPER_TABLE_I.replace(r0=0.90, lam=1.6, lam_grant=0.25),
+    # Mixed hardware: tight threshold, fast reclaim, gentle grant.
+    "hetero-fleet": PAPER_TABLE_I.replace(r0=0.97, lam=1.6, lam_grant=0.25),
     # Crash/restart churn: grant aggressively into freed memory.
-    "failover-churn": PAPER_TABLE_I.replace(r0=0.98, lam=1.0444),
+    "failover-churn": PAPER_TABLE_I.replace(r0=0.98, lam=0.95),
+    # CacheLoop (runtime objective): iterative scans under HPCC bursts
+    # want a near-critical symmetric gain -- evictions cost reloads, but
+    # swapping costs 4-300x runtime, so track the threshold tightly.
+    "spark-iterative-cache": PAPER_TABLE_I.replace(r0=0.9425, lam=1.8),
+    # CacheLoop with a slow refill pipe: slope feedforward reclaims
+    # ahead of the burst, halving the evict-reload churn.
+    "cache-churn": PAPER_TABLE_I.replace(r0=0.90, lam=1.6, feedforward=0.5),
+}
+
+# Which tuning objective produced each preset (tune_gains score_fn).
+LAB_TUNED_OBJECTIVES: Dict[str, str] = {
+    "spark-iterative-cache": "runtime",
+    "cache-churn": "runtime",
 }
 
 

@@ -431,6 +431,32 @@ def make_paper_config(configuration: int, *, app: Optional[IterativeAppSpec]
     raise ValueError("configuration must be 1..4")
 
 
+def make_cache_parity_config(*, n_compute: int = 2, cache_gib: float = 32.0,
+                             dataset_gib: float = 128.0, iterations: int = 25,
+                             seed: int = 0, **overrides) -> SimConfig:
+    """The CacheLoop oracle configuration: a pure cache-dynamics run.
+
+    A small static-capacity, no-HPCC setup whose discrete-event hit
+    ratio the analytic cache model in the scanned sweep must reproduce:
+    each node cyclically scans a ``dataset_gib / n_compute`` partition
+    through a ``cache_gib`` LFU cache, so after the cold first pass the
+    admission-stabilized resident prefix yields exactly
+    ``(iterations - 1) * cache_gib`` block hits out of
+    ``iterations * partition`` reads.  The network bandwidth is raised
+    so the run stays compute-shaped (fewer ticks); hit counting is
+    bandwidth-independent.  ``tests/test_cacheloop.py`` asserts the
+    sweep engine's ``hit_ratio`` lands within 0.02 of this oracle.
+    """
+    app = IterativeAppSpec(name="parity-scan", dataset_gib=dataset_gib,
+                           block_gib=1.0, iterations=iterations,
+                           compute_s_per_gib=0.2)
+    kw = dict(name="cache-parity", n_compute=n_compute,
+              static_cache_gib=cache_gib, controller=None, run_hpcc=False,
+              app=app, agg_net_gibps=8.0, seed=seed)
+    kw.update(overrides)
+    return SimConfig(**kw)
+
+
 def paper_controller_params(**overrides) -> ControllerParams:
     """Table I parameters."""
     kw = dict(total_memory=125.0 * GiB, r0=0.95, lam=0.5,

@@ -5,15 +5,19 @@ to run *populations* of closed-loop simulations as one compiled
 program:
 
 * :mod:`.scenarios` -- declarative :class:`ScenarioSpec` (trace family,
-  fleet size, heterogeneity, burst/failure injection) + a registry of
-  named scenarios (the paper's Sec. IV.A configs and beyond-paper
-  stress shapes).
+  fleet size, heterogeneity, burst/failure injection, optional
+  :class:`CacheSpec` cache-workload knobs) + a registry of named
+  scenarios (the paper's Sec. IV.A configs and beyond-paper stress
+  shapes).
 * :mod:`.sweep`     -- the device-resident engine: demand compiled to
   ``(N, T)``, the loop run as one jitted ``lax.scan`` over time,
   ``vmap``'d over a :class:`GainSet`, optionally ``shard_map``'d over
   devices along the gain axis.  Histories never reach the host: every
   metric streams through the scan, and chunks transfer O(gains)
-  scalars.
+  scalars.  With a :class:`CacheSpec` attached, the scan also carries
+  **CacheLoop** state per node -- resident set, analytic hit ratio,
+  eviction/refill flux, modeled app runtime -- so sweeps score the
+  paper's headline metric, not just stability.
 * :mod:`.score`     -- Figs. 5-8 analogue metrics (:class:`FleetStats`)
   and scalar objectives, plus the streaming fixed-bin quantile and
   Kahan reduction primitives the engine fuses into its scan.
@@ -26,24 +30,30 @@ Tuned presets surface through ``repro.configs.dynims.tuned_params`` and
 ``MemoryPlane.for_scenario``.
 """
 
-from .scenarios import (ScenarioSpec, TRACE_FAMILIES, get_scenario,
-                        list_scenarios, register_scenario)
+from .scenarios import (CacheSpec, ScenarioSpec, TRACE_FAMILIES,
+                        get_scenario, list_scenarios, register_scenario)
 from .score import (FleetStats, OVER_R0_EPS, QUANT_BINS, QUANT_LEVELS,
-                    QUANT_RANGE, SETTLE_TOL, compute_fleet_stats,
-                    default_score, finalize_fleet_stats, kahan_add,
-                    quantile_from_codes, stats_to_dict, utilization_codes)
-from .sweep import (CODES_BUDGET_BYTES, DEFAULT_CHUNK, GainSet, SweepResult,
+                    QUANT_RANGE, RUNTIME_WEIGHT, SETTLE_TOL,
+                    compute_fleet_stats, default_score, finalize_fleet_stats,
+                    hpl_slowdown_curve, kahan_add, quantile_from_codes,
+                    runtime_score, stats_to_dict, utilization_codes)
+from .sweep import (CODES_BUDGET_BYTES, DEFAULT_CHUNK, GainSet, SweepPlan,
+                    SweepResult, paper_law_mask, plan_specialization,
                     resolve_devices, run_sweep, sweep_demand)
-from .tune import (PortfolioResult, TuneResult, grid_gains, halving_tune,
-                   random_gains, tune_gains, tune_portfolio)
+from .tune import (OBJECTIVES, PortfolioResult, TuneResult, grid_gains,
+                   halving_tune, random_gains, resolve_objective, tune_gains,
+                   tune_portfolio)
 
 __all__ = [
-    "CODES_BUDGET_BYTES", "DEFAULT_CHUNK", "FleetStats", "GainSet",
-    "OVER_R0_EPS", "PortfolioResult", "QUANT_BINS", "QUANT_LEVELS",
-    "QUANT_RANGE", "SETTLE_TOL", "ScenarioSpec", "SweepResult",
-    "TRACE_FAMILIES", "TuneResult", "compute_fleet_stats", "default_score",
+    "CODES_BUDGET_BYTES", "CacheSpec", "DEFAULT_CHUNK", "FleetStats",
+    "GainSet", "OBJECTIVES", "OVER_R0_EPS", "PortfolioResult", "QUANT_BINS",
+    "QUANT_LEVELS", "QUANT_RANGE", "RUNTIME_WEIGHT", "SETTLE_TOL",
+    "ScenarioSpec", "SweepPlan", "SweepResult", "TRACE_FAMILIES",
+    "TuneResult", "compute_fleet_stats", "default_score",
     "finalize_fleet_stats", "get_scenario", "grid_gains", "halving_tune",
-    "kahan_add", "list_scenarios", "quantile_from_codes", "random_gains",
-    "register_scenario", "resolve_devices", "run_sweep", "stats_to_dict",
-    "sweep_demand", "tune_gains", "tune_portfolio", "utilization_codes",
+    "hpl_slowdown_curve", "kahan_add", "list_scenarios", "paper_law_mask",
+    "plan_specialization", "quantile_from_codes", "random_gains",
+    "register_scenario", "resolve_devices", "resolve_objective", "run_sweep",
+    "runtime_score", "stats_to_dict", "sweep_demand", "tune_gains",
+    "tune_portfolio", "utilization_codes",
 ]

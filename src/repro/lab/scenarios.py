@@ -18,14 +18,82 @@ a name or a spec everywhere the lab takes a scenario.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from ..core.eviction import POLICY_MODELS
 from ..core.traces import (GiB, bursty_trace, constant_trace,
                            fleet_demand_traces, hpcc_trace)
 
 TRACE_FAMILIES = ("hpcc", "constant", "bursty")
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    """CacheLoop workload knobs: the storage tenant's cache dynamics.
+
+    Attached to a :class:`ScenarioSpec` this turns the sweep engine's
+    saturated-store model into a per-node cache simulation carried
+    through the scan: a resident set bounded by the controller's grant,
+    an analytic reuse-distance hit curve (see
+    :class:`~repro.core.eviction.PolicyModel`), eviction flux when the
+    grant shrinks, read-through refill when misses are admitted back,
+    and a penalty model converting misses + evictions + memory pressure
+    into modeled app runtime.  ``None`` (the default) keeps the
+    paper-faithful saturated store and its specialized fast path.
+
+    Fields:
+      policy:        eviction policy whose analytic model shapes the
+                     hit curve (``lfu`` -- the paper's Alluxio setup --
+                     ``lru``, ``fifo``, ``adaptive``).
+      reuse_skew:    Zipf exponent alpha of block popularity in [0, 1);
+                     0 = uniform / cyclic-scan reuse, ->1 = hot-spot.
+      working_set_frac: app working set as a fraction of per-node total
+                     memory (Sec. IV: 100-200 GB datasets on 125 GB
+                     nodes -> per-node fractions around 0.2-0.5).
+      access_gibps:  per-node rate at which the app reads its working
+                     set (block scans per wall second).
+      refill_gibps:  read-through admission bandwidth -- how fast
+                     misses can repopulate a grown grant (remote-tier
+                     read bandwidth in the paper's testbed).
+      miss_penalty_s_per_gib: extra modeled seconds per GiB served
+                     remotely instead of from the local cache (~1/remote
+                     read bandwidth; Table-II-era default).
+      evict_penalty_s_per_gib: churn cost per evicted GiB (invalidation
+                     and re-registration overhead; small).
+      warm_frac:     fraction of the initial grant resident at t=0
+                     (0 = cold start, matching ``cluster_sim``).
+    """
+
+    policy: str = "lfu"
+    reuse_skew: float = 0.6
+    working_set_frac: float = 0.5
+    access_gibps: float = 2.0
+    refill_gibps: float = 1.05
+    miss_penalty_s_per_gib: float = 0.95
+    evict_penalty_s_per_gib: float = 0.05
+    warm_frac: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.policy not in POLICY_MODELS:
+            raise ValueError(f"policy must be one of "
+                             f"{sorted(POLICY_MODELS)}")
+        if not (0.0 <= self.reuse_skew < 1.0):
+            raise ValueError("reuse_skew must be in [0, 1)")
+        if self.working_set_frac <= 0.0:
+            raise ValueError("working_set_frac must be positive")
+        if self.access_gibps <= 0.0 or self.refill_gibps <= 0.0:
+            raise ValueError("access_gibps and refill_gibps must be "
+                             "positive")
+        if (self.miss_penalty_s_per_gib < 0.0
+                or self.evict_penalty_s_per_gib < 0.0):
+            raise ValueError("penalties must be non-negative")
+        if not (0.0 <= self.warm_frac <= 1.0):
+            raise ValueError("warm_frac must be in [0, 1]")
+
+    def replace(self, **kw) -> "CacheSpec":
+        return dataclasses.replace(self, **kw)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +125,12 @@ class ScenarioSpec:
                        resumes -- exercises the grant path.
       occupancy:       how full the storage tenant keeps its grant
                        (paper experiments: hot cache, 1.0).
+      cache:           optional :class:`CacheSpec` enabling CacheLoop
+                       (hit-ratio / eviction / app-runtime dynamics in
+                       the scanned loop).  ``None`` keeps the saturated
+                       store; a cache spec requires ``occupancy == 1``
+                       (the resident set replaces the occupancy
+                       abstraction).
     """
 
     name: str
@@ -76,6 +150,7 @@ class ScenarioSpec:
     failure_rate: float = 0.0
     failure_len_s: float = 5.0
     occupancy: float = 1.0
+    cache: Optional[CacheSpec] = None
     description: str = ""
 
     def __post_init__(self) -> None:
@@ -89,6 +164,9 @@ class ScenarioSpec:
             raise ValueError("failure_rate must be in [0, 1]")
         if not (0.0 < self.occupancy <= 1.0):
             raise ValueError("occupancy must be in (0, 1]")
+        if self.cache is not None and self.occupancy != 1.0:
+            raise ValueError("cache modeling replaces the occupancy "
+                             "abstraction; need occupancy == 1.0")
 
     def replace(self, **kw) -> "ScenarioSpec":
         return dataclasses.replace(self, **kw)
@@ -234,3 +312,23 @@ register_scenario(ScenarioSpec(
     base_gib=60.0, amp_range=(0.9, 1.1), failure_rate=0.15,
     failure_len_s=10.0,
     description="15% of nodes crash-restart: grant path under churn"))
+
+# CacheLoop scenarios: the same demand families with cache dynamics in
+# the scanned loop, so sweeps score modeled app runtime (the paper's
+# headline metric) and not just control-loop stability.
+register_scenario(ScenarioSpec(
+    name="spark-iterative-cache", family="hpcc", n_nodes=64,
+    n_intervals=1500, offset_gib=22.0, amp_range=(0.9, 1.1),
+    cache=CacheSpec(policy="lfu", reuse_skew=0.6, working_set_frac=0.5,
+                    access_gibps=2.0, refill_gibps=1.05),
+    description="Sec. IV workload with CacheLoop: iterative Spark scans a "
+                "~62G working set through an LFU cache under HPCC bursts"))
+register_scenario(ScenarioSpec(
+    name="cache-churn", family="bursty", n_nodes=64, n_intervals=1200,
+    base_gib=70.0, burst_gib=40.0, burst_every_s=12.0, burst_len_s=3.0,
+    amp_range=(0.9, 1.1),
+    cache=CacheSpec(policy="lru", reuse_skew=0.3, working_set_frac=0.45,
+                    access_gibps=2.0, refill_gibps=0.7,
+                    evict_penalty_s_per_gib=0.1),
+    description="bursts force evict/refill cycles through a slow-refill "
+                "LRU cache: reclaim aggression now costs reloads"))

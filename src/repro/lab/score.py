@@ -26,6 +26,12 @@ streamed accumulators so the metric *definitions* stay in this module.
 gain point -- higher is better -- trading granted storage against
 pressure.  Tuning (``lab.tune``) maximizes it; swap in any callable
 with the same signature for a different objective.
+
+CacheLoop additions: :class:`FleetStats` carries ``hit_ratio`` /
+``evicted_bytes`` / ``app_runtime`` / ``app_slowdown`` (neutral when
+cache modeling is off), :func:`hpl_slowdown_curve` is the vectorized
+Fig.-2 pressure multiplier the scanned cache model applies, and
+:func:`runtime_score` is the pure modeled-app-runtime objective.
 """
 
 from __future__ import annotations
@@ -57,7 +63,15 @@ _QUANT_SCALE = QUANT_BINS / (QUANT_RANGE[1] - QUANT_RANGE[0])
 
 
 class FleetStats(NamedTuple):
-    """Per-gain stability metrics; each field is scalar or ``(G,)``."""
+    """Per-gain stability metrics; each field is scalar or ``(G,)``.
+
+    The last four fields are the CacheLoop (cache-dynamics) metrics.
+    With cache modeling off (``ScenarioSpec.cache is None``) they hold
+    their neutral values -- ``hit_ratio=1``, ``evicted_bytes=0``,
+    ``app_runtime`` equal to the ideal horizon wall-clock,
+    ``app_slowdown=1`` -- so every objective built on them is a no-op
+    for pure stability sweeps.
+    """
 
     mean_utilization: Array
     p99_utilization: Array
@@ -69,6 +83,10 @@ class FleetStats(NamedTuple):
     capacity_std_gib: Array
     granted_volume_gib_s: Array      # integral of the storage grant
     settle_intervals: Array          # first t after which max util <= r0+tol
+    hit_ratio: Array                 # fleet cache hits / accesses (bytes)
+    evicted_bytes: Array             # controller-forced eviction flux
+    app_runtime: Array               # modeled app runtime, s (fleet barrier)
+    app_slowdown: Array              # app_runtime / ideal horizon wall-clock
 
 
 def compute_fleet_stats(
@@ -78,6 +96,9 @@ def compute_fleet_stats(
     r0: Union[float, Array],
     interval_s: float,
     p99_utilization: Optional[Array] = None,
+    hit_ratio: Optional[Array] = None,
+    evicted_bytes: Optional[Array] = None,
+    app_runtime: Optional[Array] = None,
 ) -> FleetStats:
     """Reduce a ``(T, N)`` closed-loop history to :class:`FleetStats`.
 
@@ -90,6 +111,11 @@ def compute_fleet_stats(
     XLA's CPU sort is ~40x slower than numpy's selection, so the sweep
     engine computes it host-side on the materialized history and passes
     it in via ``p99_utilization``; left as None it is computed here.
+
+    The CacheLoop fields (``hit_ratio`` / ``evicted_bytes`` /
+    ``app_runtime``) come from a cache-dynamics simulation this dense
+    path does not run; callers with cache state pass them in, everyone
+    else gets the neutral values.
     """
     utils = jnp.asarray(utils)
     caps = jnp.asarray(caps)
@@ -100,6 +126,9 @@ def compute_fleet_stats(
     last_bad = jnp.where(bad.any(), t - 1 - jnp.argmax(bad[::-1]), -1)
     if p99_utilization is None:
         p99_utilization = jnp.quantile(utils, 0.99)
+    ideal_s = t * interval_s
+    if app_runtime is None:
+        app_runtime = jnp.float32(ideal_s)
     return FleetStats(
         mean_utilization=utils.mean(),
         p99_utilization=p99_utilization,
@@ -111,6 +140,11 @@ def compute_fleet_stats(
         capacity_std_gib=caps.std() / GiB,
         granted_volume_gib_s=caps.mean(axis=1).sum() * interval_s / GiB,
         settle_intervals=(last_bad + 1).astype(jnp.int32),
+        hit_ratio=jnp.float32(1.0) if hit_ratio is None else hit_ratio,
+        evicted_bytes=(jnp.float32(0.0) if evicted_bytes is None
+                       else evicted_bytes),
+        app_runtime=app_runtime,
+        app_slowdown=jnp.asarray(app_runtime, jnp.float32) / ideal_s,
     )
 
 
@@ -129,6 +163,24 @@ def kahan_add(total: Array, comp: Array, x: Array) -> Tuple[Array, Array]:
     y = x - comp
     t = total + y
     return t, (t - total) - y
+
+
+def hpl_slowdown_curve(utilization: Array) -> Array:
+    """Fig.-2 execution-time multiplier, vectorized for the scan.
+
+    The elementwise jax form of
+    :func:`repro.core.traces.hpl_slowdown` (``swap_frac=0``): flat to
+    92% utilization, ~1.35x at 98%, 4x at 100%, then the deep-swap
+    cliff.  The CacheLoop carry applies it per node per interval to
+    price un-relieved pressure into the modeled app runtime; a parity
+    test pins it to the scalar reference.
+    """
+    u = jnp.clip(jnp.asarray(utilization, jnp.float32), 0.0, 1.5)
+    return jnp.where(
+        u <= 0.92, 1.0,
+        jnp.where(u <= 0.98, 1.0 + (u - 0.92) / 0.06 * 0.35,
+                  jnp.where(u <= 1.0, 1.35 + (u - 0.98) / 0.02 * 2.65,
+                            4.0 + (u - 1.0) * 300.0)))
 
 
 def utilization_codes(utils: Array) -> Array:
@@ -196,12 +248,22 @@ def finalize_fleet_stats(
     r0: Array,
     n_intervals: int,
     interval_s: float,
+    hits_gib: Optional[Array] = None,        # (N,) sum of hit bytes / GiB
+    evicted_gib: Optional[Array] = None,     # (N,) sum of evicted bytes / GiB
+    app_time_s: Optional[Array] = None,      # (N,) modeled per-node app time
+    accesses_gib: Optional[Array] = None,    # scalar per-node access total
 ) -> FleetStats:
     """Assemble :class:`FleetStats` from streamed per-node accumulators.
 
     The metric definitions (thresholds, units, settle semantics) match
     :func:`compute_fleet_stats` on the dense history exactly; only the
     reduction order differs (per-node lanes folded once at the end).
+
+    The four trailing cache arguments are the CacheLoop accumulators;
+    all-None (cache modeling off) yields the neutral field values.
+    ``app_runtime`` is the slowest node's modeled time -- iterative
+    apps synchronize on a barrier, so the straggler sets the fleet's
+    runtime (``cluster_sim``'s iteration semantics).
     """
     t = n_intervals
     n = util_sum.shape[-1]
@@ -211,6 +273,15 @@ def finalize_fleet_stats(
     caps_var = jnp.maximum(caps_sumsq_gib.sum() / samples
                            - caps_mean * caps_mean, 0.0)
     max_util = util_max.max()
+    ideal_s = t * interval_s
+    if app_time_s is None:
+        hit_ratio = jnp.float32(1.0)
+        evicted_bytes = jnp.float32(0.0)
+        app_runtime = jnp.asarray(ideal_s, jnp.float32)
+    else:
+        hit_ratio = hits_gib.sum() / (n * accesses_gib)
+        evicted_bytes = evicted_gib.sum() * jnp.float32(GiB)
+        app_runtime = app_time_s.max()
     return FleetStats(
         mean_utilization=util_sum.sum() / samples,
         p99_utilization=p99_utilization,
@@ -222,7 +293,18 @@ def finalize_fleet_stats(
         capacity_std_gib=jnp.sqrt(caps_var),
         granted_volume_gib_s=caps_total / n * interval_s,
         settle_intervals=(last_bad.max() + 1).astype(jnp.int32),
+        hit_ratio=hit_ratio,
+        evicted_bytes=evicted_bytes,
+        app_runtime=app_runtime,
+        app_slowdown=app_runtime / ideal_s,
     )
+
+
+# GiB-equivalents one full unit of modeled app slowdown costs in
+# default_score: the paper's 5X-runtime headline is an app-level
+# metric, so once a scenario models cache dynamics the objective must
+# price it on par with the stability terms.
+RUNTIME_WEIGHT = 50.0
 
 
 def default_score(stats: FleetStats) -> Array:
@@ -232,6 +314,9 @@ def default_score(stats: FleetStats) -> Array:
     paper's asymmetry: a swapping node (utilization > 1) collapses HPL
     by ~10x (Fig. 2), so violations dominate; sustained time above
     ``r0`` costs throughput; slow settling delays every burst response.
+    The app-runtime term is zero whenever cache modeling is off
+    (``app_slowdown`` is pinned at 1), so pure stability sweeps score
+    exactly as before CacheLoop.
     """
     return (
         jnp.asarray(stats.mean_capacity_gib)
@@ -239,7 +324,21 @@ def default_score(stats: FleetStats) -> Array:
         - 2000.0 * jnp.asarray(stats.pressure_violation_rate)
         - 100.0 * jnp.asarray(stats.max_over_r0)
         - 0.01 * jnp.asarray(stats.settle_intervals)
+        - RUNTIME_WEIGHT * (jnp.asarray(stats.app_slowdown) - 1.0)
     )
+
+
+def runtime_score(stats: FleetStats) -> Array:
+    """Pure modeled-app-runtime objective; higher is better.
+
+    The negated slowdown of the fleet's straggler node: the metric the
+    paper's headline result (up to 5X Spark runtime) optimizes.  Memory
+    pressure needs no separate guard -- the Fig.-2 curve inside the
+    CacheLoop already stretches ``app_runtime`` catastrophically once a
+    node swaps.  Only meaningful on cache-enabled scenarios; with cache
+    modeling off every gain scores the constant -1.
+    """
+    return -jnp.asarray(stats.app_slowdown)
 
 
 def stats_to_dict(stats: FleetStats,

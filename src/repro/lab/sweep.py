@@ -30,6 +30,18 @@ bit-identical to the sharded one (each gain's program is unchanged).
 Gain chunks bound peak *device* memory (the uint16 code history is
 ``chunk x T x N x 2`` bytes); ``chunk=None`` picks the largest chunk
 within :data:`CODES_BUDGET_BYTES`.
+
+**CacheLoop**: a scenario with a :class:`~repro.lab.scenarios.CacheSpec`
+adds per-node cache state to the scan carry -- resident-set size, an
+analytic reuse-distance hit ratio, eviction/refill flux as the
+controller resizes the store, and a penalty model folding misses +
+evictions + the Fig.-2 pressure curve into modeled app runtime
+(:class:`~repro.lab.score.FleetStats` ``hit_ratio`` / ``evicted_bytes``
+/ ``app_runtime``).  The cache knobs are trace-time constants, so
+cache-off scenarios compile the exact pre-CacheLoop program, and a
+mixed paper/beyond-paper gain set is partitioned by law class
+(:func:`paper_law_mask`) so only the points with active beyond-paper
+knobs pay for the fallback executable.
 """
 
 from __future__ import annotations
@@ -37,7 +49,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Optional, Sequence, Tuple, Union
+from typing import NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -50,11 +62,12 @@ except AttributeError:
     from jax.experimental.shard_map import shard_map as _shard_map
 
 from ..core.control import ControllerParams, vectorized_step
+from ..core.eviction import policy_model
 from ..core.traces import GiB
-from .scenarios import ScenarioSpec, get_scenario
+from .scenarios import CacheSpec, ScenarioSpec, get_scenario
 from .score import (FleetStats, OVER_R0_EPS, SETTLE_TOL, default_score,
-                    finalize_fleet_stats, kahan_add, quantile_from_codes,
-                    utilization_codes)
+                    finalize_fleet_stats, hpl_slowdown_curve, kahan_add,
+                    quantile_from_codes, utilization_codes)
 
 # Upper bound on gains per compiled chunk; the auto-chunk logic lowers
 # it when the per-gain uint16 code history would blow the budget.
@@ -153,7 +166,8 @@ class GainSet:
 def _one_gain_stream(demand_tn, m, inv_m, r0_g, lam_g, lam_grant_g, u_min_g,
                      u_max_g, db_g, ff_g, interval_s, occupancy, *,
                      paper_law: bool, unit_occupancy: bool,
-                     static_bounds: Optional[Tuple[float, float]]):
+                     static_bounds: Optional[Tuple[float, float]],
+                     cache: Optional[CacheSpec]):
     """Closed loop for one gain point, fully streamed.
 
     The scan carry holds only per-node accumulators (O(N) state); the
@@ -170,6 +184,20 @@ def _one_gain_stream(demand_tn, m, inv_m, r0_g, lam_g, lam_grant_g, u_min_g,
     clamps against compile-time constants instead of broadcast traced
     scalars.  All paths produce identical results for parameters the
     faster path admits.
+
+    ``cache`` (CacheLoop) swaps the saturated store for per-node cache
+    dynamics carried through the scan: the controller observes the
+    *resident set* (``v = d + resident``, the quantity cluster_sim's
+    monitor reads off the real ShardCache), shrinking the grant evicts
+    down to it immediately, and misses refill a grown grant read-
+    through up to the admission bandwidth.  The analytic hit curve
+    ``h(f) = c * f**(1-alpha) + (1-c) * f`` (see
+    :class:`~repro.core.eviction.PolicyModel`) converts the resident
+    fraction of the working set into a hit ratio; misses, eviction
+    churn, and the Fig.-2 pressure curve accumulate into modeled app
+    runtime.  All cache knobs are scenario constants, so the cache
+    branch is resolved at trace time -- ``cache=None`` compiles the
+    exact pre-CacheLoop program.
     """
     n_steps, n_nodes = demand_tn.shape
     if static_bounds is not None:
@@ -187,25 +215,37 @@ def _one_gain_stream(demand_tn, m, inv_m, r0_g, lam_g, lam_grant_g, u_min_g,
     thr_over = r0_g + OVER_R0_EPS
     thr_settle = r0_g + SETTLE_TOL
     inv_gib = jnp.float32(1.0 / GiB)
+    if cache is not None:
+        conc = float(policy_model(cache.policy).concentration)
+        hit_exp = 1.0 - float(cache.reuse_skew)
+        miss_pen = jnp.float32(cache.miss_penalty_s_per_gib)
+        evict_pen = jnp.float32(cache.evict_penalty_s_per_gib)
+        w = jnp.float32(cache.working_set_frac) * m        # (N,) bytes
+        inv_w = 1.0 / w
+        access_g = jnp.float32(cache.access_gibps) * interval_s  # GiB/itv
+        refill_b = jnp.float32(cache.refill_gibps * GiB) * interval_s
 
     def saturated_usage(u, d):
         return d + u if unit_occupancy else d + occupancy * u
 
     def step(carry, d):
-        if paper_law:
-            (u, us, us_c, cs, cs_c, c2, mx, n_r0, n_viol, last_bad,
-             t) = carry
+        law, cst, acc = carry
+        (us, us_c, cs, cs_c, c2, mx, n_r0, n_viol, last_bad, t) = acc
+        u = law[0]
+        if cache is None:
             v = saturated_usage(u, d)                  # saturated store
+        else:
+            # The monitor sees what the store actually holds, not the
+            # grant: a freshly granted GiB is empty until refilled.
+            v = d + cst[0]
+        if paper_law:
             v_eff = v
         else:
-            (u, v_prev, us, us_c, cs, cs_c, c2, mx, n_r0, n_viol, last_bad,
-             t) = carry
-            v = saturated_usage(u, d)                  # saturated store
             # ``vectorized_step``'s own feedforward branch is resolved
             # at trace time from a Python float, which a vmapped gain
             # axis cannot feed; applying it to v up front is identical
             # (the law uses v_eff everywhere v appears).
-            v_eff = v + ff_g * (v - v_prev)
+            v_eff = v + ff_g * (v - law[1])
         u_next = vectorized_step(
             u, v_eff, total_memory=m, r0=r0_g, lam=lam_g,
             u_min=u_min_g, u_max=u_max_g,
@@ -221,39 +261,78 @@ def _one_gain_stream(demand_tn, m, inv_m, r0_g, lam_g, lam_grant_g, u_min_g,
         n_r0 = n_r0 + (r > thr_over)
         n_viol = n_viol + (r > 1.0)
         last_bad = jnp.where(r > thr_settle, t, last_bad)
-        tail = (us, us_c, cs, cs_c, c2, mx, n_r0, n_viol, last_bad, t + 1)
-        head = (u_next,) if paper_law else (u_next, v)
-        return head + tail, utilization_codes(r)
+        acc = (us, us_c, cs, cs_c, c2, mx, n_r0, n_viol, last_bad, t + 1)
+        if cache is not None:
+            resident, hs, hs_c, es, es_c, ts, ts_c = cst
+            # Actuation evicts down to the shrunk grant within the
+            # interval (the paper's "free space" RPC semantics);
+            # min/max forms keep the arithmetic exact when nothing
+            # changes.
+            res_ev = jnp.minimum(resident, u_next)
+            ev_g = (resident - res_ev) * inv_gib
+            f = jnp.minimum(res_ev * inv_w, 1.0)
+            hit = conc * f ** hit_exp + (1.0 - conc) * f
+            miss_g = (1.0 - hit) * access_g
+            # Read-through refill: only missed bytes repopulate the
+            # grant, capped by admission bandwidth, the grant itself,
+            # and the working set.
+            target = jnp.minimum(u_next, w)
+            resident = jnp.minimum(
+                target, res_ev + jnp.minimum(miss_g * jnp.float32(GiB),
+                                             refill_b))
+            dt_app = (interval_s * hpl_slowdown_curve(r)
+                      + miss_g * miss_pen + ev_g * evict_pen)
+            hs, hs_c = kahan_add(hs, hs_c, hit * access_g)
+            es, es_c = kahan_add(es, es_c, ev_g)
+            ts, ts_c = kahan_add(ts, ts_c, dt_app)
+            cst = (resident, hs, hs_c, es, es_c, ts, ts_c)
+        law = (u_next,) if paper_law else (u_next, v)
+        return (law, cst, acc), utilization_codes(r)
 
     acc0 = (zeros, zeros, zeros, zeros, zeros, zeros, izeros, izeros,
             jnp.full((n_nodes,), -1, jnp.int32), jnp.int32(0))
+    cst0 = ()
+    if cache is not None:
+        res0 = jnp.float32(cache.warm_frac) * jnp.minimum(u0, w)
+        cst0 = (res0, zeros, zeros, zeros, zeros, zeros, zeros)
     if paper_law:
-        init = (u0,) + acc0
+        law0 = (u0,)
     else:
         # Seed v_prev with the first interval's usage so the slope term
         # is exactly zero before there is a previous observation
         # (matching the scalar loop's v_prev=None first step).
-        init = (u0, saturated_usage(u0, demand_tn[0])) + acc0
-    carry, codes = jax.lax.scan(step, init, demand_tn, unroll=2)
-    (us, _, cs, _, c2, mx, n_r0, n_viol, last_bad, _) = carry[-10:]
+        v0 = (saturated_usage(u0, demand_tn[0]) if cache is None
+              else demand_tn[0] + cst0[0])
+        law0 = (u0, v0)
+    carry, codes = jax.lax.scan(step, (law0, cst0, acc0), demand_tn,
+                                unroll=2)
+    _, cst, acc = carry
+    (us, _, cs, _, c2, mx, n_r0, n_viol, last_bad, _) = acc
     p99 = quantile_from_codes(codes, 0.99, n_steps * n_nodes)
+    cache_kw = {}
+    if cache is not None:
+        cache_kw = dict(hits_gib=cst[1], evicted_gib=cst[3],
+                        app_time_s=cst[5],
+                        accesses_gib=access_g * n_steps)
     return finalize_fleet_stats(
         util_sum=us, util_max=mx, caps_sum_gib=cs, caps_sumsq_gib=c2,
         over_r0_count=n_r0, violation_count=n_viol, last_bad=last_bad,
         p99_utilization=p99, r0=r0_g, n_intervals=n_steps,
-        interval_s=interval_s)
+        interval_s=interval_s, **cache_kw)
 
 
 def _chunk_stats(demand_tn, m, r0, lam, lam_grant, u_min, u_max, deadband,
                  feedforward, interval_s, occupancy, *, paper_law: bool,
                  unit_occupancy: bool,
-                 static_bounds: Optional[Tuple[float, float]]):
+                 static_bounds: Optional[Tuple[float, float]],
+                 cache: Optional[CacheSpec]):
     """One gain chunk: scan over T, vmap over gains -> (G,)-field stats.
 
     ``demand_tn`` is ``(T, N)`` bytes (shared by every gain point),
     ``m`` is ``(N,)`` bytes, gain arrays are ``(G,)``; ``interval_s``
     and ``occupancy`` ride along as traced scalars so every
-    (chunk, T, specialization) tuple maps to exactly one executable.
+    (chunk, T, specialization, cache spec) tuple maps to exactly one
+    executable.
     """
     demand_tn = jnp.asarray(demand_tn, jnp.float32)
     m = jnp.asarray(m, jnp.float32)
@@ -264,7 +343,7 @@ def _chunk_stats(demand_tn, m, r0, lam, lam_grant, u_min, u_max, deadband,
                                 lam_grant_g, u_min_g, u_max_g, db_g, ff_g,
                                 interval_s, occupancy, paper_law=paper_law,
                                 unit_occupancy=unit_occupancy,
-                                static_bounds=static_bounds)
+                                static_bounds=static_bounds, cache=cache)
 
     return jax.vmap(one_gain)(
         jnp.asarray(r0, jnp.float32), jnp.asarray(lam, jnp.float32),
@@ -276,7 +355,8 @@ def _chunk_stats(demand_tn, m, r0, lam, lam_grant, u_min, u_max, deadband,
 
 @functools.lru_cache(maxsize=None)
 def _compiled_sweep(devices: Tuple, paper_law: bool, unit_occupancy: bool,
-                    static_bounds: Optional[Tuple[float, float]]):
+                    static_bounds: Optional[Tuple[float, float]],
+                    cache: Optional[CacheSpec]):
     """Jitted chunk program for a device tuple (sharded when > 1).
 
     The gain axis is split over a 1-D ``("gains",)`` mesh with
@@ -286,7 +366,7 @@ def _compiled_sweep(devices: Tuple, paper_law: bool, unit_occupancy: bool,
     """
     fn = functools.partial(_chunk_stats, paper_law=paper_law,
                            unit_occupancy=unit_occupancy,
-                           static_bounds=static_bounds)
+                           static_bounds=static_bounds, cache=cache)
     if len(devices) <= 1:
         return jax.jit(fn)
     mesh = Mesh(np.asarray(devices), ("gains",))
@@ -338,6 +418,44 @@ def _resolve_chunk(chunk: Optional[int], n_gains: int, n_steps: int,
 # The sweep driver
 # ---------------------------------------------------------------------------
 
+class SweepPlan(NamedTuple):
+    """Trace-time specializations one gain set compiles under."""
+
+    paper_law: bool
+    unit_occupancy: bool
+    static_bounds: Optional[Tuple[float, float]]
+
+
+def paper_law_mask(gains: GainSet) -> np.ndarray:
+    """Per gain point: does the specialized paper-faithful law apply?
+
+    A point leaves the fast path only when a beyond-paper knob is
+    actually active -- asymmetric grant gain, nonzero deadband, or
+    slope feedforward.
+    """
+    return ((gains.feedforward == 0.0) & (gains.deadband == 0.0)
+            & (gains.lam_grant == gains.lam))
+
+
+def plan_specialization(gains: GainSet,
+                        occupancy: float = 1.0) -> SweepPlan:
+    """The specializations :func:`sweep_demand` compiles ``gains`` under.
+
+    With a fully paper-faithful gain set (symmetric gains, zero
+    deadband, zero feedforward) the hot loop sheds the slope state and
+    both law branches -- the common case (default grids, every registry
+    preset) runs ~2x faster.  Uniform capacity bounds clamp against
+    compile-time constants.  Mixed gain sets are partitioned by
+    :func:`paper_law_mask` first, so this expects one law class.
+    """
+    static_bounds = None
+    if np.unique(gains.u_min).size == 1 and np.unique(gains.u_max).size == 1:
+        static_bounds = (float(gains.u_min[0]), float(gains.u_max[0]))
+    return SweepPlan(paper_law=bool(paper_law_mask(gains).all()),
+                     unit_occupancy=float(occupancy) == 1.0,
+                     static_bounds=static_bounds)
+
+
 def sweep_demand(
     demand: np.ndarray,
     gains: GainSet,
@@ -347,6 +465,7 @@ def sweep_demand(
     occupancy: float = 1.0,
     chunk: Optional[int] = None,
     devices: Union[None, int, Sequence] = None,
+    cache: Optional[CacheSpec] = None,
 ) -> FleetStats:
     """Sweep a raw ``(N, T)`` demand matrix over every gain point.
 
@@ -358,9 +477,36 @@ def sweep_demand(
     asynchronous backend chunk k+1 computes while chunk k's (G,)-scalar
     stats drain.  ``devices`` shards the gain axis (see module docs);
     chunking and sharding are implementation details -- stats are
-    independent of both.
+    independent of both.  ``cache`` enables CacheLoop (see
+    :class:`~repro.lab.scenarios.CacheSpec`); a gain set mixing
+    paper-faithful and beyond-paper points is partitioned by law class
+    so each class runs its own specialized executable.
     """
     demand = np.asarray(demand)
+    if cache is not None and float(occupancy) != 1.0:
+        raise ValueError("cache modeling replaces the occupancy "
+                         "abstraction; need occupancy == 1.0")
+    mask = paper_law_mask(gains)
+    if mask.any() and not mask.all():
+        # Mixed law classes: dispatch each class at its own
+        # specialization and stitch stats back in gain order, so the
+        # beyond-paper points never drag the whole grid off the fast
+        # path.
+        sub_kw = dict(node_memory=node_memory, interval_s=interval_s,
+                      occupancy=occupancy, chunk=chunk, devices=devices,
+                      cache=cache)
+        idx_fast = np.flatnonzero(mask)
+        idx_slow = np.flatnonzero(~mask)
+        fast = sweep_demand(demand, gains.take(idx_fast), **sub_kw)
+        slow = sweep_demand(demand, gains.take(idx_slow), **sub_kw)
+        merged = []
+        for f in FleetStats._fields:
+            a, b = getattr(fast, f), getattr(slow, f)
+            out = np.empty(len(gains), dtype=a.dtype)
+            out[idx_fast] = a
+            out[idx_slow] = b
+            merged.append(out)
+        return FleetStats(*merged)
     n_nodes, n_steps = demand.shape
     demand_tn = np.ascontiguousarray(demand.T, dtype=np.float32)
     m = np.broadcast_to(np.asarray(node_memory, np.float64),
@@ -376,18 +522,9 @@ def sweep_demand(
                                   chunk - n_real % chunk)
                         for f in dataclasses.fields(GainSet)))
         gains = gains.concat(pad)
-    # Trace-time specialization: with a fully paper-faithful gain set
-    # (symmetric gains, zero deadband, zero feedforward) the hot loop
-    # sheds the slope state and both law branches -- the common case
-    # (default grids, every registry preset) runs ~2x faster.
-    paper_law = bool(np.all(gains.feedforward == 0.0)
-                     and np.all(gains.deadband == 0.0)
-                     and np.all(gains.lam_grant == gains.lam))
-    unit_occupancy = float(occupancy) == 1.0
-    static_bounds = None
-    if np.unique(gains.u_min).size == 1 and np.unique(gains.u_max).size == 1:
-        static_bounds = (float(gains.u_min[0]), float(gains.u_max[0]))
-    fn = _compiled_sweep(devs, paper_law, unit_occupancy, static_bounds)
+    plan = plan_specialization(gains, occupancy)
+    fn = _compiled_sweep(devs, plan.paper_law, plan.unit_occupancy,
+                         plan.static_bounds, cache)
     iv = np.float32(interval_s)
     occ = np.float32(occupancy)
     # one host->device transfer of the shared arrays, not one per chunk
@@ -467,7 +604,8 @@ def run_sweep(
     t0 = time.perf_counter()
     stats = sweep_demand(
         demand, gains, node_memory=m, interval_s=spec.interval_s,
-        occupancy=spec.occupancy, chunk=chunk, devices=devices)
+        occupancy=spec.occupancy, chunk=chunk, devices=devices,
+        cache=spec.cache)
     elapsed = time.perf_counter() - t0
     return SweepResult(scenario=spec, gains=gains, stats=stats, seed=seed,
                        elapsed_s=elapsed)

@@ -37,10 +37,30 @@ import numpy as np
 from ..configs.dynims import PAPER_TABLE_I
 from ..core.control import ControllerParams
 from .scenarios import ScenarioSpec, get_scenario
-from .score import FleetStats, default_score, stats_to_dict
+from .score import FleetStats, default_score, runtime_score, stats_to_dict
 from .sweep import GainSet, SweepResult, run_sweep
 
 ScoreFn = Callable[[FleetStats], np.ndarray]
+
+# Named objectives accepted anywhere a score_fn goes: ``"default"`` is
+# the stability/yield trade (``lab.score.default_score``);
+# ``"runtime"`` optimizes modeled app runtime on CacheLoop scenarios
+# (``lab.score.runtime_score``).
+OBJECTIVES: Dict[str, ScoreFn] = {
+    "default": default_score,
+    "runtime": runtime_score,
+}
+
+
+def resolve_objective(score_fn: Union[str, ScoreFn]) -> ScoreFn:
+    """Accept a named objective or any ``FleetStats -> (G,)`` callable."""
+    if callable(score_fn):
+        return score_fn
+    try:
+        return OBJECTIVES[score_fn]
+    except KeyError:
+        raise ValueError(f"unknown objective {score_fn!r}; named "
+                         f"objectives: {sorted(OBJECTIVES)}") from None
 
 
 def grid_gains(
@@ -50,20 +70,30 @@ def grid_gains(
     r0: Sequence[float] = (0.88, 0.90, 0.92, 0.94, 0.95, 0.96, 0.97, 0.98),
     lam_grant: Sequence[Optional[float]] = (None,),
     u_max: Optional[Sequence[float]] = None,
+    deadband: Optional[Sequence[float]] = None,
+    feedforward: Optional[Sequence[float]] = None,
 ) -> GainSet:
     """Cartesian product of gain axes around ``base`` (paper Table I).
 
     ``lam_grant=None`` entries mean symmetric gains (grant at ``lam``);
     ``u_max`` entries are bytes and default to the base cap.
+    ``deadband`` / ``feedforward`` axes search the remaining
+    beyond-paper knobs (default: the base values; points with any of
+    the three active run on the sweep engine's fallback path -- see
+    ``lab.sweep.paper_law_mask``).
     """
     base = base or PAPER_TABLE_I
     u_maxes = tuple(u_max) if u_max is not None else (base.u_max,)
-    rows = [(r, l, l if g is None else g, um)
-            for r in r0 for l in lam for g in lam_grant for um in u_maxes]
+    deadbands = tuple(deadband) if deadband is not None else (base.deadband,)
+    feedforwards = (tuple(feedforward) if feedforward is not None
+                    else (base.feedforward,))
+    rows = [(r, l, l if g is None else g, um, db, ff)
+            for r in r0 for l in lam for g in lam_grant for um in u_maxes
+            for db in deadbands for ff in feedforwards]
     arr = np.asarray(rows, dtype=np.float64)
     return GainSet(r0=arr[:, 0], lam=arr[:, 1], lam_grant=arr[:, 2],
                    u_min=np.full(len(rows), base.u_min), u_max=arr[:, 3],
-                   deadband=base.deadband, feedforward=base.feedforward)
+                   deadband=arr[:, 4], feedforward=arr[:, 5])
 
 
 def random_gains(
@@ -133,10 +163,23 @@ class TuneResult:
 def _default_candidates(method: str, budget: int, base: ControllerParams,
                         seed: int) -> GainSet:
     if method == "grid":
-        k = max(int(np.sqrt(budget)), 2)
-        lam = np.linspace(0.1, 1.8, k)
-        r0 = np.linspace(0.88, 0.98, k)
-        return grid_gains(base, lam=lam, r0=r0)
+        # ~3/4 of the budget on the paper-law (lam, r0) plane -- those
+        # points run the sweep engine's specialized fast path -- and
+        # the rest split across the three beyond-paper law variants
+        # (asymmetric grant gain, hysteresis deadband, slope
+        # feedforward), which the engine partitions onto the fallback
+        # executable (lab.sweep.paper_law_mask).  Ceilings keep the
+        # candidate count at or above ``budget``.
+        k = max(int(np.ceil(np.sqrt(budget * 0.75))), 2)
+        g = grid_gains(base, lam=np.linspace(0.1, 1.8, k),
+                       r0=np.linspace(0.88, 0.98, k))
+        kv = max(int(np.ceil(np.sqrt(max(budget - k * k, 0) / 3.0))), 2)
+        vlam = np.linspace(0.3, 1.6, kv)
+        vr0 = np.linspace(0.90, 0.97, kv)
+        for knob in (dict(lam_grant=(0.25,)), dict(deadband=(0.005,)),
+                     dict(feedforward=(0.5,))):
+            g = g.concat(grid_gains(base, lam=vlam, r0=vr0, **knob))
+        return g
     if method == "random":
         return random_gains(budget, base, seed=seed + 7)
     raise ValueError("method must be grid|random|halving")
@@ -150,19 +193,26 @@ def tune_gains(
     method: str = "grid",
     budget: int = 64,
     seed: int = 0,
-    score_fn: ScoreFn = default_score,
+    score_fn: Union[str, ScoreFn] = default_score,
     chunk: Optional[int] = None,
     devices=None,
 ) -> TuneResult:
     """Search gains for ``scenario`` and return the winner.
 
-    ``method`` is ``"grid"`` (cartesian lam x r0 product sized to
-    ``budget``), ``"random"``, or ``"halving"`` (successive halving via
-    :func:`halving_tune`); pass an explicit ``gains`` set to bring your
-    own candidates.  The baseline (``base_params``, default paper
-    Table I) is always scored on the full horizon alongside the
-    candidates, so the returned score never falls below it.
+    ``method`` is ``"grid"`` (a paper-law lam x r0 plane plus
+    beyond-paper law variants, sized to *at least* ``budget`` -- the
+    plane is ceil'd and the three variant sub-grids always ride along,
+    so small budgets overshoot; ``len(result.sweep.gains)`` reports
+    the real count), ``"random"`` (exactly ``budget`` points), or
+    ``"halving"`` (successive halving via :func:`halving_tune`); pass
+    an explicit ``gains`` set to bring your own candidates.
+    ``score_fn`` takes a callable or a named objective (``"default"`` /
+    ``"runtime"`` -- the latter optimizes CacheLoop's modeled app
+    runtime).  The baseline (``base_params``, default paper Table I) is
+    always scored on the full horizon alongside the candidates, so the
+    returned score never falls below it.
     """
+    score_fn = resolve_objective(score_fn)
     base = base_params or PAPER_TABLE_I
     if method == "halving":
         return halving_tune(scenario, base_params=base, gains=gains,
@@ -197,7 +247,7 @@ def halving_tune(
     keep: float = 0.25,
     min_survivors: int = 4,
     seed: int = 0,
-    score_fn: ScoreFn = default_score,
+    score_fn: Union[str, ScoreFn] = default_score,
     chunk: Optional[int] = None,
     devices=None,
 ) -> TuneResult:
@@ -218,6 +268,7 @@ def halving_tune(
     for its (chunk, horizon) pair, so repeated tuning runs amortize
     compilation across scenarios with matching horizons.
     """
+    score_fn = resolve_objective(score_fn)
     spec = get_scenario(scenario)
     base = base_params or PAPER_TABLE_I
     if gains is None:
@@ -287,7 +338,7 @@ def tune_portfolio(
     budget: int = 64,
     aggregate: str = "worst",
     seed: int = 0,
-    score_fn: ScoreFn = default_score,
+    score_fn: Union[str, ScoreFn] = default_score,
     chunk: Optional[int] = None,
     devices=None,
 ) -> PortfolioResult:
@@ -296,9 +347,12 @@ def tune_portfolio(
     Sweeps the same candidates over every scenario and aggregates the
     (S, G) score matrix per gain point -- ``"worst"`` (min over
     scenarios: robust gains that degrade gracefully everywhere) or
-    ``"mean"``.  The baseline rides along, so the winner's aggregate
+    ``"mean"``.  ``score_fn`` accepts the named objectives too
+    (``"runtime"`` portfolio-tunes modeled app runtime across CacheLoop
+    scenarios).  The baseline rides along, so the winner's aggregate
     never falls below the paper defaults across the portfolio.
     """
+    score_fn = resolve_objective(score_fn)
     if not scenarios:
         raise ValueError("need at least one scenario")
     if aggregate not in ("worst", "mean"):

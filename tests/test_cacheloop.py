@@ -1,0 +1,362 @@
+"""CacheLoop: cache dynamics in the scanned sweep.
+
+Three oracles pin the model:
+
+* the **discrete-event simulator** (``core.cluster_sim``) -- the
+  analytic hit curve must land within 0.02 of the per-key LFU cache on
+  the cyclic-scan parity configuration;
+* a **float64 numpy reimplementation** of the same analytic dynamics --
+  the float32 streamed accumulators must match a dense reference they
+  never materialize;
+* the **pre-CacheLoop fast path** -- a degenerate cache spec (instant
+  refill, unbounded working set, warm start) must reproduce the
+  saturated-store loop bit for bit, and ``cache=None`` must keep every
+  new field at its neutral value.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.dynims import PAPER_TABLE_I
+from repro.core.cluster_sim import (make_cache_parity_config,
+                                    paper_controller_params, simulate)
+from repro.core.eviction import POLICY_MODELS, PolicyModel, policy_model
+from repro.core.traces import GiB, hpl_slowdown
+from repro.lab import (CacheSpec, FleetStats, GainSet, ScenarioSpec,
+                       default_score, get_scenario, grid_gains,
+                       hpl_slowdown_curve, paper_law_mask,
+                       plan_specialization, resolve_objective, run_sweep,
+                       runtime_score, sweep_demand, tune_gains)
+from repro.lab.tune import _default_candidates
+
+STABILITY_FIELDS = FleetStats._fields[:10]
+CACHE_FIELDS = ("hit_ratio", "evicted_bytes", "app_runtime", "app_slowdown")
+
+
+def small(name, **kw):
+    return get_scenario(name).replace(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Cache-off: neutral fields, unchanged fast path
+# ---------------------------------------------------------------------------
+
+def test_cache_off_fields_are_neutral():
+    spec = small("bursty-serving", n_nodes=16, n_intervals=150)
+    r = run_sweep(spec, GainSet.from_params(PAPER_TABLE_I), seed=0)
+    assert float(r.stats.hit_ratio[0]) == 1.0
+    assert float(r.stats.evicted_bytes[0]) == 0.0
+    ideal = spec.n_intervals * spec.interval_s
+    assert float(r.stats.app_runtime[0]) == pytest.approx(ideal)
+    assert float(r.stats.app_slowdown[0]) == 1.0
+    # the runtime term of default_score is exactly zero, and the pure
+    # runtime objective degenerates to a constant
+    np.testing.assert_allclose(r.scores(runtime_score), -1.0)
+
+
+def test_degenerate_cache_matches_fast_path_bitwise():
+    """A cache that always mirrors the grant (warm start, unbounded
+    working set, instant refill) IS the saturated store: every
+    stability metric must be bit-identical to the cache=None path."""
+    p = paper_controller_params()
+    demand = np.asarray(get_scenario("bursty-serving").replace(
+        n_nodes=24, n_intervals=200).build_demand(seed=3))
+    gains = grid_gains(p, lam=(0.3, 0.9, 1.4), r0=(0.9, 0.95))
+    degenerate = CacheSpec(policy="lfu", reuse_skew=0.0,
+                           working_set_frac=1e6, access_gibps=1e6,
+                           refill_gibps=1e6, miss_penalty_s_per_gib=0.0,
+                           evict_penalty_s_per_gib=0.0, warm_frac=1.0)
+    off = sweep_demand(demand, gains, node_memory=p.total_memory,
+                       interval_s=p.interval_s)
+    on = sweep_demand(demand, gains, node_memory=p.total_memory,
+                      interval_s=p.interval_s, cache=degenerate)
+    for f in STABILITY_FIELDS:
+        np.testing.assert_array_equal(getattr(off, f), getattr(on, f),
+                                      err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# Discrete-event oracle parity (the acceptance gate)
+# ---------------------------------------------------------------------------
+
+def test_hit_ratio_matches_discrete_event_oracle():
+    """The analytic cache model reproduces cluster_sim's per-key LFU
+    hit ratio within 0.02 on the cyclic-scan parity configuration."""
+    cfg = make_cache_parity_config()
+    oracle = simulate(cfg)
+    assert oracle.peak_utilization < 0.9      # pure cache dynamics, no
+    # pressure coupling in the comparison
+
+    w_gib = cfg.app.dataset_gib / cfg.n_compute     # per-node partition
+    n_intervals, interval_s = 1600, cfg.interval_s
+    # access rate sized so total model accesses equal the oracle's
+    # total block reads (iterations x partition per node)
+    access = cfg.app.iterations * w_gib / (n_intervals * interval_s)
+    spec = ScenarioSpec(
+        name="cache-parity", family="constant", n_nodes=cfg.n_compute,
+        n_intervals=n_intervals, base_gib=0.0,
+        offset_gib=cfg.spark_exec_gib + cfg.os_base_gib,
+        amp_range=(1.0, 1.0), phase_shift=False,
+        node_memory_gib=cfg.node_memory_gib,
+        cache=CacheSpec(policy="lfu", reuse_skew=0.0,
+                        working_set_frac=w_gib / cfg.node_memory_gib,
+                        access_gibps=access, refill_gibps=access,
+                        miss_penalty_s_per_gib=0.4))
+    # pin the grant at the oracle's static capacity
+    pinned = paper_controller_params(u_min=cfg.static_cache_gib * GiB,
+                                     u_max=cfg.static_cache_gib * GiB)
+    r = run_sweep(spec, GainSet.from_params(pinned), seed=0)
+    assert abs(float(r.stats.hit_ratio[0]) - oracle.hit_ratio) <= 0.02
+    # the miss-penalty model lands in the oracle's runtime ballpark
+    assert float(r.stats.app_runtime[0]) == pytest.approx(
+        oracle.app_runtime_s, rel=0.15)
+    # capacity pinned -> the controller never forces an eviction
+    assert float(r.stats.evicted_bytes[0]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# float64 numpy oracle for the streamed accumulators
+# ---------------------------------------------------------------------------
+
+def cache_oracle(demand, m, params, cache, interval_s):
+    """Dense float64 reference of the CacheLoop dynamics."""
+    demand = np.asarray(demand, np.float64)
+    n, t = demand.shape
+    m = np.broadcast_to(np.asarray(m, np.float64), (n,))
+    conc = policy_model(cache.policy).concentration
+    hit_exp = 1.0 - cache.reuse_skew
+    w = cache.working_set_frac * m
+    access = cache.access_gibps * interval_s            # GiB / interval
+    refill = cache.refill_gibps * GiB * interval_s      # bytes / interval
+    u = np.full(n, params.u_max)
+    resident = cache.warm_frac * np.minimum(u, w)
+    v_prev = demand[:, 0] + resident
+    hits = 0.0
+    evicted = 0.0
+    app = np.zeros(n)
+    util_sum = 0.0
+    for i in range(t):
+        v = demand[:, i] + resident
+        v_eff = v + params.feedforward * (v - v_prev)
+        r_eff = v_eff / m
+        err = r_eff - params.r0
+        lam = np.where(
+            err < 0,
+            params.lam if params.lam_grant is None else params.lam_grant,
+            params.lam)
+        u_next = u - lam * v_eff * err / params.r0
+        if params.deadband > 0.0:
+            u_next = np.where(np.abs(err) <= params.deadband, u, u_next)
+        u_next = np.clip(u_next, params.u_min, params.u_max)
+        r = v / m
+        util_sum += r.sum()
+        res_ev = np.minimum(resident, u_next)
+        ev_g = (resident - res_ev) / GiB
+        f = np.minimum(res_ev / w, 1.0)
+        hit = conc * f ** hit_exp + (1.0 - conc) * f
+        miss_g = (1.0 - hit) * access
+        resident = np.minimum(np.minimum(u_next, w),
+                              res_ev + np.minimum(miss_g * GiB, refill))
+        slow = np.array([hpl_slowdown(x) for x in r])
+        app += (interval_s * slow + miss_g * cache.miss_penalty_s_per_gib
+                + ev_g * cache.evict_penalty_s_per_gib)
+        hits += (hit * access).sum()
+        evicted += ev_g.sum()
+        v_prev, u = v, u_next
+    return {
+        "hit_ratio": hits / (n * t * access),
+        "evicted_bytes": evicted * GiB,
+        "app_runtime": app.max(),
+        "mean_utilization": util_sum / (n * t),
+    }
+
+
+@pytest.mark.parametrize("params_kw", [
+    {},                                                     # paper law
+    dict(lam=1.1, r0=0.92),
+    dict(lam_grant=0.3, deadband=0.004, feedforward=0.5),   # fallback path
+])
+def test_streamed_cache_stats_match_numpy_oracle(params_kw):
+    spec = small("cache-churn", n_nodes=24, n_intervals=300)
+    p = paper_controller_params(**params_kw)
+    demand = spec.build_demand(seed=6)
+    m = spec.build_node_memory(seed=6)
+    stats = sweep_demand(demand, GainSet.from_params(p), node_memory=m,
+                         interval_s=spec.interval_s, cache=spec.cache)
+    ref = cache_oracle(demand, m, p, spec.cache, spec.interval_s)
+    for key, rtol in (("hit_ratio", 1e-4), ("evicted_bytes", 1e-3),
+                      ("app_runtime", 1e-3), ("mean_utilization", 1e-4)):
+        np.testing.assert_allclose(
+            float(getattr(stats, key)[0]), ref[key], rtol=rtol,
+            atol=1e-6, err_msg=key)
+
+
+# ---------------------------------------------------------------------------
+# Eviction / refill flux and the hit-curve knobs
+# ---------------------------------------------------------------------------
+
+def test_shrinking_grant_produces_eviction_flux():
+    """Demand bursts force the controller to reclaim below the resident
+    set: evicted_bytes must be positive, and a slower refill pipe must
+    cost hit ratio."""
+    spec = small("cache-churn", n_nodes=16, n_intervals=400)
+    gains = GainSet.from_params(paper_controller_params(lam=1.2))
+    r = run_sweep(spec, gains, seed=1)
+    assert float(r.stats.evicted_bytes[0]) > 0.0
+    assert float(r.stats.app_slowdown[0]) > 1.0
+    slow_refill = spec.replace(cache=spec.cache.replace(refill_gibps=0.05))
+    r2 = run_sweep(slow_refill, gains, seed=1)
+    assert float(r2.stats.hit_ratio[0]) < float(r.stats.hit_ratio[0])
+
+
+def test_policy_and_skew_shape_the_hit_curve():
+    spec = small("spark-iterative-cache", n_nodes=16, n_intervals=300)
+    gains = GainSet.from_params(PAPER_TABLE_I)
+
+    def hit(cache):
+        r = run_sweep(spec.replace(cache=cache), gains, seed=2)
+        return float(r.stats.hit_ratio[0])
+
+    base = spec.cache
+    # frequency-concentrating policies exploit skewed reuse better
+    assert hit(base.replace(policy="lfu")) > hit(base.replace(policy="lru"))
+    assert hit(base.replace(policy="lru")) > hit(base.replace(policy="fifo"))
+    # at alpha=0 (uniform / cyclic reuse) every policy collapses to h=f
+    flat = base.replace(reuse_skew=0.0)
+    assert hit(flat.replace(policy="lfu")) == pytest.approx(
+        hit(flat.replace(policy="fifo")), rel=1e-6)
+    # more skew -> more of the working set's heat fits the grant
+    assert hit(base.replace(reuse_skew=0.9)) > hit(
+        base.replace(reuse_skew=0.1))
+
+
+def test_policy_models_registry():
+    assert set(POLICY_MODELS) == {"lfu", "lru", "fifo", "adaptive"}
+    assert policy_model("lfu").concentration == 1.0
+    assert policy_model("lfu").concentration > \
+        policy_model("lru").concentration > \
+        policy_model("fifo").concentration
+    with pytest.raises(ValueError):
+        policy_model("belady")
+    with pytest.raises(ValueError):
+        PolicyModel(concentration=1.5)
+
+
+def test_hpl_slowdown_curve_matches_scalar_reference():
+    grid = np.linspace(0.0, 1.4, 141)
+    ref = np.array([hpl_slowdown(u) for u in grid])
+    np.testing.assert_allclose(np.asarray(hpl_slowdown_curve(grid)), ref,
+                               rtol=1e-5)
+
+
+def test_cache_spec_validation():
+    with pytest.raises(ValueError):
+        CacheSpec(policy="belady")
+    with pytest.raises(ValueError):
+        CacheSpec(reuse_skew=1.0)
+    with pytest.raises(ValueError):
+        CacheSpec(working_set_frac=0.0)
+    with pytest.raises(ValueError):
+        CacheSpec(warm_frac=1.5)
+    with pytest.raises(ValueError):
+        ScenarioSpec(name="bad", occupancy=0.5, cache=CacheSpec())
+    with pytest.raises(ValueError):
+        sweep_demand(np.ones((2, 4)), GainSet.from_params(PAPER_TABLE_I),
+                     node_memory=PAPER_TABLE_I.total_memory, occupancy=0.5,
+                     cache=CacheSpec())
+
+
+# ---------------------------------------------------------------------------
+# Chunking invariance with cache state in the carry
+# ---------------------------------------------------------------------------
+
+def test_cache_sweep_chunking_invariant():
+    spec = small("cache-churn", n_nodes=16, n_intervals=200)
+    gains = grid_gains(paper_controller_params(),
+                       lam=(0.4, 0.9, 1.3), r0=(0.9, 0.94, 0.97))
+    runs = [run_sweep(spec, gains, seed=4, chunk=c)
+            for c in (None, 2, 5, 16)]
+    for other in runs[1:]:
+        for f in FleetStats._fields:
+            np.testing.assert_array_equal(
+                getattr(runs[0].stats, f), getattr(other.stats, f),
+                err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# Specialization planning and the widened default grids
+# ---------------------------------------------------------------------------
+
+def test_specialized_path_left_only_when_knobs_active():
+    p = paper_controller_params()
+    paper = grid_gains(p, lam=(0.3, 0.9), r0=(0.9, 0.95))
+    assert plan_specialization(paper).paper_law
+    assert paper_law_mask(paper).all()
+    for knob in (dict(lam_grant=(0.25,)), dict(deadband=(0.005,)),
+                 dict(feedforward=(0.5,))):
+        variant = grid_gains(p, lam=(0.5,), r0=(0.95,), **knob)
+        assert not paper_law_mask(variant).any(), knob
+        assert not plan_specialization(variant).paper_law
+    # zero-valued knobs do NOT leave the fast path
+    stealth = grid_gains(p, lam=(0.5,), r0=(0.95,), deadband=(0.0,),
+                         feedforward=(0.0,))
+    assert plan_specialization(stealth).paper_law
+
+
+def test_default_grid_searches_beyond_paper_knobs():
+    g = _default_candidates("grid", 64, PAPER_TABLE_I, seed=0)
+    mask = paper_law_mask(g)
+    assert mask.any() and not mask.all()
+    assert (g.lam_grant != g.lam).any()
+    assert (g.deadband > 0).any()
+    assert (g.feedforward > 0).any()
+    # most of the budget stays on the specialized fast path
+    assert mask.mean() > 0.5
+
+
+def test_mixed_law_sweep_partitions_and_matches_subsets():
+    """A mixed paper/beyond-paper gain set must score identically to
+    running each law class separately (partitioned dispatch)."""
+    p = paper_controller_params()
+    demand = np.asarray(small("bursty-serving", n_nodes=16,
+                              n_intervals=200).build_demand(seed=5))
+    g = _default_candidates("grid", 32, p, seed=0)
+    mask = paper_law_mask(g)
+    mixed = sweep_demand(demand, g, node_memory=p.total_memory,
+                         interval_s=p.interval_s)
+    fast = sweep_demand(demand, g.take(np.flatnonzero(mask)),
+                        node_memory=p.total_memory, interval_s=p.interval_s)
+    slow = sweep_demand(demand, g.take(np.flatnonzero(~mask)),
+                        node_memory=p.total_memory, interval_s=p.interval_s)
+    for f in FleetStats._fields:
+        np.testing.assert_array_equal(
+            getattr(mixed, f)[mask], getattr(fast, f), err_msg=f)
+        np.testing.assert_array_equal(
+            getattr(mixed, f)[~mask], getattr(slow, f), err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# Runtime objective through the tuners
+# ---------------------------------------------------------------------------
+
+def test_runtime_objective_tunes_modeled_runtime():
+    spec = small("cache-churn", n_nodes=16, n_intervals=300)
+    result = tune_gains(spec, budget=16, score_fn="runtime", seed=0)
+    assert result.score >= result.baseline_score
+    best = result.best_stats()
+    base = tune_gains(spec, gains=GainSet.from_params(PAPER_TABLE_I),
+                      score_fn="runtime", seed=0)
+    assert best["app_runtime"] <= base.best_stats()["app_runtime"] + 1e-6
+    # default_score now prices the slowdown too (nonzero runtime term)
+    s = run_sweep(spec, GainSet.from_params(result.params), seed=0)
+    assert float(default_score(s.stats)[0]) != float(
+        default_score(s.stats._replace(
+            app_slowdown=np.ones_like(np.asarray(s.stats.app_slowdown))))[0])
+
+
+def test_resolve_objective_names_and_errors():
+    assert resolve_objective("default") is default_score
+    assert resolve_objective("runtime") is runtime_score
+    assert resolve_objective(default_score) is default_score
+    with pytest.raises(ValueError):
+        resolve_objective("latency")
