@@ -14,11 +14,17 @@ live ``MemoryPlane`` and replays a burst through it.
     PYTHONPATH=src python examples/tune_gains.py \
         spark-iterative-cache --objective runtime   # CacheLoop: tune for
                                                     # modeled app runtime
+    PYTHONPATH=src python examples/tune_gains.py --check-presets
+        # preset-drift gate: regenerate every LAB_TUNED preset on its
+        # tuning grid and exit 1 with a diff if configs/dynims.py is
+        # stale relative to the tuning code (CI runs this)
 """
 
 import argparse
+import sys
 
-from repro.configs.dynims import LAB_TUNED_OBJECTIVES, tuned_scenarios
+from repro.configs.dynims import (LAB_TUNED, LAB_TUNED_OBJECTIVES,
+                                  tuned_scenarios)
 from repro.core import (GiB, MemoryPlane, NodeSpec, PlaneSpec, ShardCache,
                         SimulatedMonitor, StoreSpec)
 from repro.lab import (OBJECTIVES, get_scenario, list_scenarios, tune_gains,
@@ -67,6 +73,46 @@ def deploy(result) -> None:
               f"  store={cache.used() / GiB:6.1f} GiB")
 
 
+_GAIN_FIELDS = ("r0", "lam", "lam_grant", "u_min", "u_max", "deadband",
+                "feedforward")
+
+
+def check_presets(budget: int) -> int:
+    """Preset-drift gate: are the checked-in LAB_TUNED presets what the
+    tuning code produces today?
+
+    Regenerates every preset on the default grid at ``budget`` (the
+    grid the presets were derived from) under its recorded objective
+    and diffs the winner against ``configs/dynims.py``.  A nonzero
+    exit means the presets are stale -- rerun ``--all`` and commit the
+    new values (with the finding that changed them).
+    """
+    stale = []
+    for name in tuned_scenarios():
+        objective = LAB_TUNED_OBJECTIVES.get(name, "default")
+        result = tune_gains(name, budget=budget, score_fn=objective)
+        preset = LAB_TUNED[name]
+        diffs = [(f, getattr(preset, f), getattr(result.params, f))
+                 for f in _GAIN_FIELDS
+                 if getattr(preset, f) != getattr(result.params, f)]
+        print(f"{name} [{objective}]: "
+              f"{'STALE' if diffs else 'ok'} "
+              f"(regenerated score {result.score:.3f})")
+        for field, have, want in diffs:
+            print(f"   {field}: preset {have!r} != regenerated {want!r}")
+        if diffs:
+            stale.append(name)
+    if stale:
+        print(f"\npreset drift in {len(stale)} scenario(s): "
+              f"{', '.join(stale)}")
+        print("regenerate with: python examples/tune_gains.py --all "
+              f"--budget {budget}")
+        return 1
+    print(f"\nall {len(tuned_scenarios())} LAB_TUNED presets regenerate "
+          "identically")
+    return 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("scenario", nargs="?", default="bursty-serving",
@@ -83,11 +129,17 @@ def main() -> None:
                          "runtime (cache-enabled scenarios)")
     ap.add_argument("--all", action="store_true",
                     help="retune every checked-in preset scenario")
+    ap.add_argument("--check-presets", action="store_true",
+                    help="preset-drift gate: regenerate every LAB_TUNED "
+                         "preset and exit 1 with a diff if configs/"
+                         "dynims.py is stale (CI runs this)")
     ap.add_argument("--portfolio", nargs="+", metavar="SCENARIO",
                     help="worst-case tune one gain set across these "
                          "scenarios instead of single-scenario tuning")
     args = ap.parse_args()
 
+    if args.check_presets:
+        sys.exit(check_presets(args.budget))
     if args.portfolio:
         result = tune_portfolio(args.portfolio, budget=args.budget,
                                 aggregate="worst", score_fn=args.objective)

@@ -37,8 +37,9 @@ from .eviction import (AdaptivePolicy, FIFOPolicy, LFUPolicy, LRUPolicy,
                        make_policy)
 from .monitor import (DeviceMemoryMonitor, HostMemoryMonitor, MemorySample,
                       SimulatedMonitor)
-from .plane import (ArrayController, ControlPlane, MemoryPlane, NodeSpec,
-                    PlaneSpec, StoreSpec, make_fused_step)
+from .plane import (ArrayController, CapturedTrace, ControlPlane,
+                    DEFAULT_TRACE_CAPACITY, MemoryPlane, NodeSpec, PlaneSpec,
+                    StoreSpec, TraceRecorder, make_fused_step)
 from .store import (EvictionReport, KVBlockPool, ManagedStore, ShardCache,
                     StoreRegistry, StoreStats)
 from .stream import AGG_TOPIC, RAW_TOPIC, AggregatedMetrics, MetricAggregator
@@ -47,8 +48,9 @@ from .traces import (GiB, IterativeAppSpec, Phase, TierSpec, hpcc_trace,
 
 __all__ = [
     "AGG_TOPIC", "ActionHistory", "AdaptivePolicy", "AggregatedMetrics",
-    "ArrayController", "CONTROL_TOPIC", "ControlAction", "ControlPlane",
-    "ControllerParams", "DeviceMemoryMonitor", "DynIMSController",
+    "ArrayController", "CONTROL_TOPIC", "CapturedTrace", "ControlAction",
+    "ControlPlane", "ControllerParams", "DEFAULT_TRACE_CAPACITY",
+    "DeviceMemoryMonitor", "DynIMSController", "TraceRecorder",
     "EvictionReport", "FIFOPolicy", "GiB", "HostMemoryMonitor",
     "IterativeAppSpec", "KVBlockPool", "LFUPolicy", "LRUPolicy",
     "ManagedStore", "MemoryPlane", "MemorySample", "MessageBus",

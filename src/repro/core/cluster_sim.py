@@ -39,7 +39,7 @@ import numpy as np
 
 from .control import ControllerParams
 from .eviction import LFUPolicy
-from .plane import MemoryPlane, NodeSpec, PlaneSpec
+from .plane import CapturedTrace, MemoryPlane, NodeSpec, PlaneSpec
 from .monitor import SimulatedMonitor
 from .store import ShardCache, StoreRegistry
 from .traces import (GiB, IterativeAppSpec, TierSpec, hpcc_trace,
@@ -71,6 +71,12 @@ class SimConfig:
     warm_data_cache: bool = True              # dataset gen leaves buffer cache warm
     seed: int = 0
     max_sim_s: float = 3600.0 * 4
+    # ReplayLoop: keep the last trace_capacity control intervals of the
+    # plane's telemetry and return them as SimResult.trace, so a
+    # simulated deployment's own workload becomes a sweepable scenario
+    # (ScenarioSpec.from_capture).  Only meaningful with a controller.
+    record_trace: bool = False
+    trace_capacity: int = 4096
 
 
 @dataclass
@@ -90,6 +96,7 @@ class SimResult:
     cap_gib: np.ndarray = field(default_factory=lambda: np.empty(0))
     peak_utilization: float = 0.0
     mean_cap_gib: float = 0.0
+    trace: Optional[CapturedTrace] = None     # cfg.record_trace capture
 
 
 class _DataTier:
@@ -215,6 +222,7 @@ def simulate(cfg: SimConfig) -> SimResult:
         plane = MemoryPlane(PlaneSpec(
             params=cfg.controller,
             backend="scalar",    # float64 reference law, paper-faithful
+            record=cfg.trace_capacity if cfg.record_trace else 0,
             nodes=tuple(
                 NodeSpec(
                     name=f"node{node.idx}",
@@ -336,6 +344,9 @@ def simulate(cfg: SimConfig) -> SimResult:
     if cfg.run_hpcc:
         fins = [n.hpcc_finish_s for n in nodes if n.hpcc_finish_s is not None]
         hpcc_fin = max(fins) if fins else None
+    captured = (plane.capture()
+                if plane is not None and cfg.record_trace and n_ticks
+                else None)
     return SimResult(
         config=cfg.name,
         app_runtime_s=float(sum(iteration_times)),
@@ -352,6 +363,7 @@ def simulate(cfg: SimConfig) -> SimResult:
         cap_gib=np.asarray(tl_cap),
         peak_utilization=peak_util,
         mean_cap_gib=float(np.mean(cap_samples)) if cap_samples else 0.0,
+        trace=captured,
     )
 
 

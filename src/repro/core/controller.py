@@ -47,7 +47,15 @@ DEFAULT_HISTORY = 1024
 
 @dataclass
 class ControlAction:
-    """One capacity decision, published to the bus for observability."""
+    """One capacity decision, published to the bus for observability.
+
+    ``epoch`` counts the controller's parameter generations: 0 until the
+    first :meth:`~DynIMSController.swap_params`, then incremented by
+    every hot-swap.  Actions from one control interval always share one
+    epoch (swaps land at interval boundaries), so a reader can verify a
+    swap dropped or duplicated no interval by checking the history is
+    epoch-monotone with no gaps per node.
+    """
 
     node: str
     timestamp: float
@@ -55,6 +63,7 @@ class ControlAction:
     u_next: float
     utilization: float
     reports: List[EvictionReport] = field(default_factory=list)
+    epoch: int = 0
 
     @property
     def delta(self) -> float:
@@ -139,6 +148,7 @@ class DynIMSController:
         self._nodes: Dict[str, _NodeState] = {}
         self._bus = bus
         self._lock = threading.RLock()
+        self._epoch = 0
         self._history = ActionHistory(max_history, track_fresh=track_fresh)
         if bus is not None:
             bus.subscribe(AGG_TOPIC, self._on_agg)
@@ -161,6 +171,28 @@ class DynIMSController:
     def nodes(self) -> List[str]:
         with self._lock:
             return list(self._nodes)
+
+    # -- online re-parameterization -----------------------------------------
+    @property
+    def epoch(self) -> int:
+        """Parameter generation: 0 at construction, +1 per swap."""
+        with self._lock:
+            return self._epoch
+
+    def swap_params(self, params: ControllerParams) -> int:
+        """Atomically replace the plane-level law parameters.
+
+        Control state (``u``, ``v_prev``) carries over -- the new law
+        continues the old trajectory from the next observation, so no
+        interval is dropped or replayed.  Nodes with a per-node
+        ``params`` override keep it (their operator pinned it
+        deliberately).  Returns the new parameter epoch, which every
+        subsequent :class:`ControlAction` is stamped with.
+        """
+        with self._lock:
+            self.params = params
+            self._epoch += 1
+            return self._epoch
 
     # -- bounded action history ---------------------------------------------
     @property
@@ -202,7 +234,7 @@ class DynIMSController:
             action = ControlAction(
                 node=agg.node, timestamp=agg.timestamp, u_prev=state.u,
                 u_next=u_next, utilization=v / agg.total if agg.total else 0.0,
-                reports=reports)
+                reports=reports, epoch=self._epoch)
             state.u = u_next
             state.v_prev = v
             self._history.append(action)

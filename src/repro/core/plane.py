@@ -30,6 +30,17 @@ Two controller backends sit behind the facade:
 A parity test (``tests/test_plane.py``) pins the two backends together
 within 1e-4 relative tolerance across heterogeneous fleets.
 
+**ReplayLoop** hooks live here too: a plane built with
+``PlaneSpec(record=N)`` (or ``plane.record()``) keeps the last ``N``
+control intervals of per-node ``(demand, utilization, grant, cache
+residency)`` in a bounded :class:`TraceRecorder` ring; ``capture()``
+snapshots it as a :class:`CapturedTrace` (dense numpy, ``.npz``
+round-trippable) that ``ScenarioSpec.from_capture`` turns into a
+sweepable replay scenario, and :meth:`MemoryPlane.swap_params`
+hot-swaps re-tuned :class:`ControllerParams` into the *running* plane
+at an interval boundary -- both backends re-specialize without
+dropping a tick, and every action is stamped with the parameter epoch.
+
 ``ControlPlane`` remains importable (also via its historical home
 ``repro.core.controller``) as a deprecated shim over the scalar backend.
 """
@@ -40,6 +51,7 @@ import dataclasses
 import threading
 import time
 import warnings
+from collections import deque
 from typing import Callable, Dict, Iterable, List, Optional, Tuple, Union
 
 import jax
@@ -51,10 +63,169 @@ from .control import ControllerParams, Signal, vectorized_step
 from .controller import (ActionHistory, CONTROL_TOPIC, ControlAction,
                          DEFAULT_HISTORY, DynIMSController)
 from .monitor import MemoryMonitor
+from .monitor import MemorySample
 from .store import ManagedStore, ShardCache, StoreRegistry
 from .stream import AGG_TOPIC, RAW_TOPIC, AggregatedMetrics, MetricAggregator
 
 BACKENDS = ("array", "scalar")
+
+#: Default ring-buffer capacity (control intervals) of a TraceRecorder.
+DEFAULT_TRACE_CAPACITY = 4096
+
+
+# ---------------------------------------------------------------------------
+# ReplayLoop: live-trace capture
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class CapturedTrace:
+    """A dense snapshot of what a running plane observed and decided.
+
+    All arrays are numpy, node-major: ``(N, T)`` over the captured
+    control intervals (``total_memory`` is ``(N,)``).  ``demand`` is the
+    compute tenant's usage (``used - storage_used``, bytes) -- the
+    quantity a replay scenario feeds back through the sweep engine;
+    ``utilization`` is the observed ``v / M``; ``grant`` the
+    controller's post-decision capacity ``u``; ``residency`` the bytes
+    the managed stores actually held (the CacheLoop observable).
+
+    Serializable: :meth:`save` writes one compressed ``.npz``,
+    :meth:`load` restores it bit-for-bit.
+    """
+
+    nodes: Tuple[str, ...]
+    interval_s: float
+    demand: np.ndarray
+    utilization: np.ndarray
+    grant: np.ndarray
+    residency: np.ndarray
+    total_memory: np.ndarray
+
+    @property
+    def n_nodes(self) -> int:
+        return self.demand.shape[0]
+
+    @property
+    def n_intervals(self) -> int:
+        return self.demand.shape[1]
+
+    @property
+    def duration_s(self) -> float:
+        return self.n_intervals * self.interval_s
+
+    def utilization_p99(self) -> float:
+        """Observed fleet p99 utilization (replay-fidelity yardstick)."""
+        return float(np.quantile(self.utilization, 0.99))
+
+    def has_residency(self) -> bool:
+        """Did the managed stores ever hold bytes during the capture?"""
+        return bool(np.nanmax(self.residency, initial=0.0) > 0.0)
+
+    def save(self, path) -> None:
+        np.savez_compressed(
+            path, nodes=np.asarray(self.nodes, dtype=np.str_),
+            interval_s=np.float64(self.interval_s), demand=self.demand,
+            utilization=self.utilization, grant=self.grant,
+            residency=self.residency, total_memory=self.total_memory)
+
+    @classmethod
+    def load(cls, path) -> "CapturedTrace":
+        with np.load(path, allow_pickle=False) as z:
+            return cls(nodes=tuple(str(n) for n in z["nodes"]),
+                       interval_s=float(z["interval_s"]),
+                       demand=z["demand"], utilization=z["utilization"],
+                       grant=z["grant"], residency=z["residency"],
+                       total_memory=z["total_memory"])
+
+
+class TraceRecorder:
+    """Bounded, thread-safe ring buffer of per-tick fleet snapshots.
+
+    :meth:`MemoryPlane.tick` feeds it one record per control interval
+    (the interval's monitor samples plus the actions the controller
+    produced); the ring retains the last ``capacity`` intervals, so a
+    long-running deployment pays O(capacity * fleet) memory however
+    long it runs.  :meth:`snapshot` densifies the ring into a
+    :class:`CapturedTrace`; nodes that joined late or skipped an
+    interval are forward/backward-filled so the arrays stay rectangular.
+    """
+
+    def __init__(self, capacity: int = DEFAULT_TRACE_CAPACITY):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._lock = threading.Lock()
+        self._ring: deque = deque(maxlen=capacity)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._ring)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._ring.clear()
+
+    def record(self, samples: Dict[str, MemorySample],
+               actions: List[ControlAction]) -> None:
+        """Append one control interval's observations and decisions."""
+        grant = {a.node: a.u_next for a in actions}
+        tick = {
+            node: (max(s.used - s.storage_used, 0.0), s.used, s.total,
+                   grant.get(node, np.nan), s.storage_used)
+            for node, s in samples.items()}
+        with self._lock:
+            self._ring.append(tick)
+
+    def snapshot(self, interval_s: float = 0.1) -> CapturedTrace:
+        """Densify the ring into a :class:`CapturedTrace` (numpy)."""
+        with self._lock:
+            ring = list(self._ring)
+        if not ring:
+            raise ValueError("nothing recorded yet")
+        names = sorted({n for tick in ring for n in tick})
+        n, t = len(names), len(ring)
+        idx = {name: i for i, name in enumerate(names)}
+        demand = np.full((n, t), np.nan)
+        usage = np.full((n, t), np.nan)
+        total = np.full((n, t), np.nan)
+        grant = np.full((n, t), np.nan)
+        residency = np.full((n, t), np.nan)
+        for j, tick in enumerate(ring):
+            for name, (d, v, m, u, res) in tick.items():
+                i = idx[name]
+                demand[i, j] = d
+                usage[i, j] = v
+                total[i, j] = m
+                grant[i, j] = u
+                residency[i, j] = res
+        for arr in (demand, usage, total, grant, residency):
+            _fill_gaps(arr)
+        with np.errstate(invalid="ignore", divide="ignore"):
+            utilization = np.where(total > 0, usage / total, 0.0)
+        return CapturedTrace(
+            nodes=tuple(names), interval_s=float(interval_s),
+            demand=demand, utilization=utilization, grant=grant,
+            residency=residency, total_memory=total[:, -1].copy())
+
+
+def _fill_gaps(arr: np.ndarray) -> None:
+    """In-place forward- then backward-fill NaN runs along axis 1."""
+    n, t = arr.shape
+    for i in range(n):
+        row = arr[i]
+        mask = np.isnan(row)
+        if not mask.any():
+            continue
+        if mask.all():
+            row[:] = 0.0
+            continue
+        valid = np.flatnonzero(~mask)
+        # forward fill from the previous valid sample, backward fill the
+        # leading gap from the first one
+        fill_idx = np.clip(
+            np.maximum.accumulate(np.where(mask, -1, np.arange(t))),
+            valid[0], None)
+        row[:] = row[fill_idx]
 
 
 # ---------------------------------------------------------------------------
@@ -119,6 +290,9 @@ class PlaneSpec:
                   :meth:`MemoryPlane.build_cache`.
       transport:  the message bus, or a factory for one (swap point for
                   a multi-host deployment); None -> in-process bus.
+      record:     ReplayLoop capture: retain the last ``record`` control
+                  intervals in a :class:`TraceRecorder` ring (0 = off;
+                  enable later with :meth:`MemoryPlane.record`).
     """
 
     params: ControllerParams
@@ -130,10 +304,13 @@ class PlaneSpec:
     history: int = DEFAULT_HISTORY
     eviction: str = "lfu"
     transport: Union[MessageBus, Callable[[], MessageBus], None] = None
+    record: int = 0
 
     def __post_init__(self) -> None:
         if self.backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}")
+        if self.record < 0:
+            raise ValueError("record must be >= 0 (ring capacity)")
         object.__setattr__(self, "nodes", tuple(self.nodes))
         object.__setattr__(self, "signal", Signal.coerce(self.signal))
 
@@ -202,6 +379,7 @@ class ArrayController:
         self.signal = Signal.coerce(signal)
         self._bus = bus
         self._lock = threading.RLock()
+        self._epoch = 0
         self._history = ActionHistory(max_history)
         self._names: List[str] = []
         self._index: Dict[str, int] = {}
@@ -252,6 +430,63 @@ class ArrayController:
     def node_capacity(self, node: str) -> float:
         with self._lock:
             return float(self._u[self._index[node]])
+
+    # -- online re-parameterization -----------------------------------------
+    @property
+    def epoch(self) -> int:
+        """Parameter generation: 0 at construction, +1 per swap."""
+        with self._lock:
+            return self._epoch
+
+    def prewarm(self, params: ControllerParams):
+        """Build + warm the fused step for ``params`` off the hot path.
+
+        Compiles the new gains' executable against the current fleet
+        shape so a subsequent :meth:`swap_params` is a pointer flip --
+        the control loop never waits on XLA.  If the fleet grows
+        between warm and commit, the next flush just recompiles.
+        """
+        fused = make_fused_step(params)
+        with self._lock:
+            shape_snap = (self._u.copy(), self._v_prev.copy(),
+                          self._has_prev.copy(), self._m.copy(),
+                          self._u_min.copy(), self._u_max.copy())
+        if shape_snap[0].size:
+            u, v_prev, has_prev, m, u_min, u_max = shape_snap
+            jax.block_until_ready(fused(
+                jnp.asarray(u, jnp.float32), jnp.asarray(v_prev, jnp.float32),
+                jnp.asarray(v_prev, jnp.float32), jnp.asarray(has_prev),
+                jnp.zeros(u.shape, bool), jnp.asarray(m, jnp.float32),
+                jnp.asarray(u_min, jnp.float32),
+                jnp.asarray(u_max, jnp.float32)))
+        return fused
+
+    def swap_params(self, params: ControllerParams, fused=None) -> int:
+        """Atomically replace the fleet's law gains in a running plane.
+
+        The swap itself is a pointer flip under the controller lock at
+        an interval boundary; pass a :meth:`prewarm`-built ``fused``
+        step to keep the XLA compile off the locked path (the
+        ``MemoryPlane`` facade does).  Control state (``u``,
+        ``v_prev``) carries over; capacity bounds (``u_min`` /
+        ``u_max`` / ``M``) move with the swap for every node still on
+        the old plane-level defaults, while per-node overrides
+        (heterogeneous fleets) are preserved.  Returns the new
+        parameter epoch; subsequent actions are stamped with it.
+        """
+        if fused is None:
+            fused = self.prewarm(params)
+        with self._lock:
+            old = self.params
+            for arr, prev, new in ((self._m, old.total_memory,
+                                    params.total_memory),
+                                   (self._u_min, old.u_min, params.u_min),
+                                   (self._u_max, old.u_max, params.u_max)):
+                arr[arr == prev] = new
+            self.params = params
+            self._fused = fused
+            self._epoch += 1
+            return self._epoch
 
     # -- bounded action history ---------------------------------------------
     @property
@@ -305,7 +540,7 @@ class ArrayController:
                     node=name, timestamp=agg.timestamp,
                     u_prev=float(self._u[i]), u_next=float(u_next[i]),
                     utilization=v[i] / agg.total if agg.total else 0.0,
-                    reports=reports)
+                    reports=reports, epoch=self._epoch)
                 actions.append(action)
                 self._history.append(action)
                 self._u[i] = u_next[i]
@@ -360,6 +595,13 @@ class MemoryPlane:
                 max_history=spec.history)
         self._monitors: Dict[str, MemoryMonitor] = {}
         self._lock = threading.RLock()
+        # Serializes whole control intervals against hot-swaps: tick()
+        # holds it for the full sample -> decide -> actuate pipeline, so
+        # swap_params always lands at an interval boundary (never a
+        # half-updated fleet).
+        self._tick_lock = threading.Lock()
+        self.recorder: Optional[TraceRecorder] = (
+            TraceRecorder(spec.record) if spec.record else None)
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         for node_spec in spec.nodes:
@@ -435,14 +677,68 @@ class MemoryPlane:
         (straggler/burst mitigation); the law re-grants next interval."""
         return self.controller.squeeze(node, factor)
 
+    # -- ReplayLoop: capture and hot-swap ------------------------------------
+    @property
+    def params(self) -> ControllerParams:
+        """The plane-level law parameters currently in force."""
+        return self.controller.params
+
+    @property
+    def epoch(self) -> int:
+        """Current parameter epoch (0 until the first hot-swap)."""
+        return self.controller.epoch
+
+    def record(self, capacity: int = DEFAULT_TRACE_CAPACITY) -> TraceRecorder:
+        """Start (or restart) trace capture; returns the live recorder."""
+        self.recorder = TraceRecorder(capacity)
+        return self.recorder
+
+    def capture(self) -> CapturedTrace:
+        """Snapshot the recorded ring as a :class:`CapturedTrace`.
+
+        Raises if the plane was never recording (``PlaneSpec(record=N)``
+        or :meth:`record`) or no interval has been ticked yet.
+        """
+        if self.recorder is None:
+            raise ValueError(
+                "plane is not recording; build it with PlaneSpec(record=N) "
+                "or call plane.record() first")
+        return self.recorder.snapshot(
+            interval_s=self.controller.params.interval_s)
+
+    def swap_params(self, params: ControllerParams) -> int:
+        """Hot-swap the control-law parameters of a *running* plane.
+
+        Delegates to the backend's atomic ``swap_params`` while holding
+        the tick lock, so the swap always lands between control
+        intervals: every interval runs wholly under one parameter
+        epoch, and the :class:`ControlAction` history stays
+        epoch-monotone with no dropped or duplicated interval.  The
+        array backend's new executable is compiled and warmed *before*
+        the lock is taken, so a concurrently ticking loop never waits
+        on XLA.  The ``retune_online`` loop (``repro.lab.tune``) calls
+        this from its tuning thread.
+        """
+        prewarm = getattr(self.controller, "prewarm", None)
+        fused = prewarm(params) if prewarm is not None else None
+        with self._tick_lock:
+            if fused is not None:
+                return self.controller.swap_params(params, fused=fused)
+            return self.controller.swap_params(params)
+
     # -- control loop -------------------------------------------------------
     def tick(self) -> List[ControlAction]:
         """One control interval: sample every node, run the law once."""
-        with self._lock:
-            monitors = list(self._monitors.values())
-        for monitor in monitors:
-            self.bus.publish(RAW_TOPIC, monitor.sample())
-        return self.controller.flush()
+        with self._tick_lock:
+            with self._lock:
+                monitors = dict(self._monitors)
+            samples = {name: mon.sample() for name, mon in monitors.items()}
+            for sample in samples.values():
+                self.bus.publish(RAW_TOPIC, sample)
+            actions = self.controller.flush()
+            if self.recorder is not None:
+                self.recorder.record(samples, actions)
+            return actions
 
     def run(self, duration_s: Optional[float] = None) -> None:
         """Tick in real time at ``params.interval_s`` until stopped."""
@@ -453,7 +749,7 @@ class MemoryPlane:
             self.tick()
             if deadline is not None and time.time() >= deadline:
                 break
-            sleep = self.spec.params.interval_s - (time.time() - t0)
+            sleep = self.controller.params.interval_s - (time.time() - t0)
             if sleep > 0:
                 self._stop.wait(sleep)
 

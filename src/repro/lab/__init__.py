@@ -23,14 +23,17 @@ program:
   Kahan reduction primitives the engine fuses into its scan.
 * :mod:`.tune`      -- gain search returning a tuned
   :class:`~repro.core.control.ControllerParams`: exhaustive grid /
-  random, successive halving (:func:`halving_tune`), and
-  multi-scenario portfolio tuning (:func:`tune_portfolio`).
+  random, successive halving (:func:`halving_tune`), multi-scenario
+  portfolio tuning (:func:`tune_portfolio`), and the **ReplayLoop**
+  (:func:`retune_online`): capture a live ``MemoryPlane``'s telemetry,
+  re-tune on the replayed workload in the background, hot-swap the
+  winner into the running plane.
 
 Tuned presets surface through ``repro.configs.dynims.tuned_params`` and
 ``MemoryPlane.for_scenario``.
 """
 
-from .scenarios import (CacheSpec, ScenarioSpec, TRACE_FAMILIES,
+from .scenarios import (CacheSpec, ReplayTrace, ScenarioSpec, TRACE_FAMILIES,
                         get_scenario, list_scenarios, register_scenario)
 from .score import (FleetStats, OVER_R0_EPS, QUANT_BINS, QUANT_LEVELS,
                     QUANT_RANGE, RUNTIME_WEIGHT, SETTLE_TOL,
@@ -40,20 +43,22 @@ from .score import (FleetStats, OVER_R0_EPS, QUANT_BINS, QUANT_LEVELS,
 from .sweep import (CODES_BUDGET_BYTES, DEFAULT_CHUNK, GainSet, SweepPlan,
                     SweepResult, paper_law_mask, plan_specialization,
                     resolve_devices, run_sweep, sweep_demand)
-from .tune import (OBJECTIVES, PortfolioResult, TuneResult, grid_gains,
-                   halving_tune, random_gains, resolve_objective, tune_gains,
+from .tune import (OBJECTIVES, PortfolioResult, RetuneHandle, RetuneResult,
+                   TuneResult, grid_gains, halving_tune, random_gains,
+                   resolve_objective, retune_online, tune_gains,
                    tune_portfolio)
 
 __all__ = [
     "CODES_BUDGET_BYTES", "CacheSpec", "DEFAULT_CHUNK", "FleetStats",
     "GainSet", "OBJECTIVES", "OVER_R0_EPS", "PortfolioResult", "QUANT_BINS",
     "QUANT_LEVELS", "QUANT_RANGE", "RUNTIME_WEIGHT", "SETTLE_TOL",
-    "ScenarioSpec", "SweepPlan", "SweepResult", "TRACE_FAMILIES",
+    "ReplayTrace", "RetuneHandle", "RetuneResult", "ScenarioSpec",
+    "SweepPlan", "SweepResult", "TRACE_FAMILIES",
     "TuneResult", "compute_fleet_stats", "default_score",
     "finalize_fleet_stats", "get_scenario", "grid_gains", "halving_tune",
     "hpl_slowdown_curve", "kahan_add", "list_scenarios", "paper_law_mask",
     "plan_specialization", "quantile_from_codes", "random_gains",
-    "register_scenario", "resolve_devices", "resolve_objective", "run_sweep",
-    "runtime_score", "stats_to_dict", "sweep_demand", "tune_gains",
-    "tune_portfolio", "utilization_codes",
+    "register_scenario", "resolve_devices", "resolve_objective",
+    "retune_online", "run_sweep", "runtime_score", "stats_to_dict",
+    "sweep_demand", "tune_gains", "tune_portfolio", "utilization_codes",
 ]

@@ -195,9 +195,14 @@ def _one_gain_stream(demand_tn, m, inv_m, r0_g, lam_g, lam_grant_g, u_min_g,
     :class:`~repro.core.eviction.PolicyModel`) converts the resident
     fraction of the working set into a hit ratio; misses, eviction
     churn, and the Fig.-2 pressure curve accumulate into modeled app
-    runtime.  All cache knobs are scenario constants, so the cache
-    branch is resolved at trace time -- ``cache=None`` compiles the
-    exact pre-CacheLoop program.
+    runtime.  The first pass over the working set is warmup-aware: the
+    resident set is seeded from ``warm_frac``, and until a node has
+    scanned its working set once a strictly cyclic workload
+    (``reuse_skew`` -> 0) pays compulsory misses for every block
+    outside the warm prefix -- parity-pinned against the
+    discrete-event simulator's cold start.  All cache knobs are
+    scenario constants, so the cache branch is resolved at trace time
+    -- ``cache=None`` compiles the exact pre-CacheLoop program.
     """
     n_steps, n_nodes = demand_tn.shape
     if static_bounds is not None:
@@ -224,6 +229,14 @@ def _one_gain_stream(demand_tn, m, inv_m, r0_g, lam_g, lam_grant_g, u_min_g,
         inv_w = 1.0 / w
         access_g = jnp.float32(cache.access_gibps) * interval_s  # GiB/itv
         refill_b = jnp.float32(cache.refill_gibps * GiB) * interval_s
+        # Warmup-aware cold scan: constants of the first-pass term.
+        # The resident set is seeded from ``warm_frac`` of the initial
+        # grant; ``wf0`` is the warm-seeded fraction of the working set
+        # (the only blocks a strictly cyclic first pass can hit).
+        access_b = access_g * jnp.float32(GiB)             # bytes/itv
+        cold_mix = jnp.float32(cache.reuse_skew)
+        res0 = jnp.float32(cache.warm_frac) * jnp.minimum(u0, w)
+        wf0 = res0 * inv_w
 
     def saturated_usage(u, d):
         return d + u if unit_occupancy else d + occupancy * u
@@ -272,6 +285,18 @@ def _one_gain_stream(demand_tn, m, inv_m, r0_g, lam_g, lam_grant_g, u_min_g,
             ev_g = (resident - res_ev) * inv_gib
             f = jnp.minimum(res_ev * inv_w, 1.0)
             hit = conc * f ** hit_exp + (1.0 - conc) * f
+            # Cold-scan term: until a node has scanned its working set
+            # once (compulsory-miss window), blocks refilled *within*
+            # the pass are not re-referenced by a cyclic scan, so at
+            # reuse_skew=0 only the warm-seeded prefix can hit; as the
+            # skew grows, intra-pass re-reference of hot blocks revives
+            # the steady-state curve.  ``reuse_skew`` interpolates
+            # between the two regimes; the warm prefix is clamped by
+            # the live resident fraction (eviction shrinks it too).
+            scanned = t.astype(jnp.float32) * access_b
+            wf = jnp.minimum(wf0, f)
+            hit = jnp.where(scanned < w,
+                            wf + cold_mix * (hit - wf), hit)
             miss_g = (1.0 - hit) * access_g
             # Read-through refill: only missed bytes repopulate the
             # grant, capped by admission bandwidth, the grant itself,
@@ -293,7 +318,6 @@ def _one_gain_stream(demand_tn, m, inv_m, r0_g, lam_g, lam_grant_g, u_min_g,
             jnp.full((n_nodes,), -1, jnp.int32), jnp.int32(0))
     cst0 = ()
     if cache is not None:
-        res0 = jnp.float32(cache.warm_frac) * jnp.minimum(u0, w)
         cst0 = (res0, zeros, zeros, zeros, zeros, zeros, zeros)
     if paper_law:
         law0 = (u0,)

@@ -25,11 +25,23 @@ Three search strategies:
 The candidate set always includes the baseline gains at the final
 (full-horizon) round, so a tuned result never scores below the paper
 defaults on the tuning scenario.
+
+**ReplayLoop** closes the loop on live deployments:
+:func:`retune_online` snapshots a running ``MemoryPlane``'s
+:class:`~repro.core.plane.TraceRecorder`, fits the capture into a
+``"replay"`` scenario (:meth:`ScenarioSpec.from_capture`), runs
+:func:`halving_tune` on it in a background thread, and -- when the
+winner beats the currently deployed gains on the replayed workload --
+atomically hot-swaps the tuned :class:`ControllerParams` into the
+still-running plane at an interval boundary.  The plane's action
+history is epoch-stamped, so the swap is auditable: no interval is
+dropped or duplicated.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
@@ -383,3 +395,126 @@ def tune_portfolio(
                          for i, name in enumerate(sweeps)},
         sweeps=sweeps,
     )
+
+
+# ---------------------------------------------------------------------------
+# ReplayLoop: capture -> replay -> re-tune -> hot-swap
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RetuneResult:
+    """Outcome of one online re-tuning round."""
+
+    scenario: ScenarioSpec            # the fitted replay scenario
+    tune: TuneResult                  # full tuning outcome on the replay
+    old_params: ControllerParams      # what the plane was running
+    params: ControllerParams          # the replay winner (== tune.params)
+    swapped: bool                     # did the plane adopt the winner?
+    epoch: Optional[int]              # parameter epoch after the swap
+    capture: object                   # the CapturedTrace that was tuned on
+
+    @property
+    def improvement(self) -> float:
+        """Winner's score minus the deployed gains' score on the replay."""
+        return self.tune.improvement
+
+    def summary(self) -> str:
+        verdict = (f"hot-swapped at epoch {self.epoch}" if self.swapped
+                   else "kept deployed gains (no improvement on replay)")
+        return (f"retune[{self.scenario.name}]: deployed "
+                f"{self.tune.baseline_score:.3f} -> tuned "
+                f"{self.tune.score:.3f} (+{self.improvement:.3f}); "
+                f"{verdict}")
+
+
+class RetuneHandle:
+    """Join handle on a background :func:`retune_online` round."""
+
+    def __init__(self, thread: threading.Thread, box: dict):
+        self._thread = thread
+        self._box = box
+
+    @property
+    def done(self) -> bool:
+        return not self._thread.is_alive()
+
+    def result(self, timeout: Optional[float] = None) -> RetuneResult:
+        """Wait for the round and return its result (re-raising errors)."""
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError("retune round still running")
+        if "error" in self._box:
+            raise self._box["error"]
+        return self._box["result"]
+
+
+def retune_online(
+    plane,
+    *,
+    capture=None,
+    name: str = "captured",
+    method: str = "halving",
+    budget: int = 32,
+    score_fn: Union[str, ScoreFn] = default_score,
+    n_intervals: Optional[int] = None,
+    n_nodes: Optional[int] = None,
+    fit_cache: Optional[bool] = None,
+    min_improvement: float = 0.0,
+    swap: bool = True,
+    block: bool = True,
+    seed: int = 0,
+    chunk: Optional[int] = None,
+    devices=None,
+    **scenario_overrides,
+) -> Union[RetuneResult, "RetuneHandle"]:
+    """Re-tune a running ``MemoryPlane`` on its own captured workload.
+
+    The ReplayLoop in one call: snapshot the plane's recorded telemetry
+    (``plane.capture()``, or pass an explicit ``capture``), fit it into
+    a ``"replay"`` scenario, search gains on it with the sweep engine
+    (``method``/``budget``/``score_fn`` as in :func:`tune_gains`;
+    successive halving by default), and -- if the winner improves on
+    the *currently deployed* parameters by more than
+    ``min_improvement`` -- hot-swap it into the plane via
+    ``plane.swap_params`` (atomic, interval-boundary, epoch-stamped).
+
+    The deployed parameters are the tuning baseline, so the returned
+    ``tune.score`` never falls below what the plane is already running
+    on the replayed workload, and a no-improvement round swaps nothing.
+
+    Tuning runs on a daemon thread; the plane keeps ticking while the
+    search sweeps.  ``block=True`` (default) joins and returns the
+    :class:`RetuneResult`; ``block=False`` returns a
+    :class:`RetuneHandle` immediately (``handle.result()`` joins).
+    Extra keywords pass through to :meth:`ScenarioSpec.from_capture`
+    (e.g. ``cache=`` to pin a hand-fitted :class:`CacheSpec`).
+    """
+    if capture is None:
+        capture = plane.capture()
+    deployed = plane.params
+    spec = ScenarioSpec.from_capture(
+        capture, name=name, n_intervals=n_intervals, n_nodes=n_nodes,
+        fit_cache=fit_cache, **scenario_overrides)
+    box: dict = {}
+
+    def _round() -> None:
+        try:
+            tune = tune_gains(spec, base_params=deployed, method=method,
+                              budget=budget, seed=seed, score_fn=score_fn,
+                              chunk=chunk, devices=devices)
+            swapped, epoch = False, None
+            if swap and tune.improvement > min_improvement:
+                epoch = plane.swap_params(tune.params)
+                swapped = True
+            box["result"] = RetuneResult(
+                scenario=spec, tune=tune, old_params=deployed,
+                params=tune.params, swapped=swapped, epoch=epoch,
+                capture=capture)
+        except BaseException as exc:             # surfaced via result()
+            box["error"] = exc
+
+    thread = threading.Thread(target=_round, daemon=True,
+                              name="retune-online")
+    thread.start()
+    handle = RetuneHandle(thread, box)
+    return handle.result() if block else handle

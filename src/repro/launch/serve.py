@@ -6,6 +6,11 @@ Runs the engine against synthetic prompts, printing throughput and pool
 behaviour.  ``--burst`` simulates a host/device memory burst mid-run by
 shrinking the KV pool through its controller (the paper's Fig. 7
 scenario on the serving path) and reports preemption/recovery.
+``--retune`` closes the ReplayLoop on the serving path: the plane
+records its own KV-pool telemetry during the first wave of requests,
+``retune_online`` re-tunes the pool gains on the captured workload and
+hot-swaps the winner into the live plane, and a second wave serves
+under the new parameter epoch.
 """
 
 from __future__ import annotations
@@ -26,6 +31,10 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--burst", action="store_true")
+    ap.add_argument("--retune", action="store_true",
+                    help="capture the KV-pool workload, re-tune the pool "
+                         "gains on it online, hot-swap, serve a second wave")
+    ap.add_argument("--retune-budget", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -38,7 +47,8 @@ def main() -> None:
     cfg = get_config(args.arch)
     model = Model(cfg, remat="none")
     params = model.init(jax.random.key(args.seed))
-    plane = MemoryPlane(PlaneSpec(params=hbm_pool_params()))
+    plane = MemoryPlane(PlaneSpec(params=hbm_pool_params(),
+                                  record=2048 if args.retune else 0))
     engine = ServingEngine(model, params,
                            ServingConfig(max_batch=args.max_batch,
                                          max_len=args.max_len),
@@ -65,6 +75,23 @@ def main() -> None:
     print(f"served {len(finished)} requests, {toks} tokens in {dt:.1f}s "
           f"({toks/dt:.1f} tok/s on CPU)")
     print("engine:", stats)
+
+    if args.retune:
+        from ..lab.tune import retune_online
+        print("-- ReplayLoop: re-tuning pool gains on the captured "
+              "KV workload --")
+        result = retune_online(plane, name="kv-pool-replay",
+                               budget=args.retune_budget, block=True)
+        print("  ", result.summary())
+        p = plane.params
+        print(f"   live params now: r0={p.r0:.4f} lam={p.lam:.4f} "
+              f"lam_grant={p.lam_grant} (epoch {plane.epoch})")
+        for _ in range(max(args.requests // 2, 1)):
+            engine.submit(rng.integers(0, cfg.vocab_size, args.prompt_len),
+                          max_new_tokens=args.max_new)
+        wave2 = engine.run_until_drained()
+        print(f"   second wave under epoch {plane.epoch}: served "
+              f"{len(wave2)} requests")
 
 
 if __name__ == "__main__":

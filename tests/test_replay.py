@@ -1,0 +1,351 @@
+"""ReplayLoop: trace capture, replay scenarios, online re-tune, hot-swap.
+
+Three guarantees under test:
+
+* **capture fidelity** -- a trace captured from a live ``MemoryPlane``
+  and replayed through the sweep engine reproduces the observed closed
+  loop (p99 utilization within the float32 + streaming-quantile
+  tolerance), and survives an ``.npz`` round-trip bit for bit;
+* **hot-swap safety** -- ``swap_params`` lands at an interval boundary
+  even under a concurrently ticking plane: per node, exactly one action
+  per tick, epochs monotone, no torn parameters;
+* **the closed loop closes** -- ``retune_online`` tunes on the
+  captured workload, never returns a score below the deployed gains,
+  and the plane actually runs the winner afterwards.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.dynims import PAPER_TABLE_I
+from repro.core import (ArrayController, CapturedTrace, GiB, MemoryPlane,
+                        MemorySample, PlaneSpec, SimulatedMonitor,
+                        TraceRecorder)
+from repro.core.cluster_sim import paper_controller_params
+from repro.core.controller import ControlAction
+from repro.core.store import StoreRegistry
+from repro.lab import (GainSet, ReplayTrace, ScenarioSpec, get_scenario,
+                       retune_online, run_sweep)
+
+P = paper_controller_params()
+
+
+def _sample(node, t, used, total=125 * GiB, storage=0.0):
+    return MemorySample(node=node, timestamp=t, used=used, total=total,
+                        storage_used=storage)
+
+
+def _action(node, u_next, epoch=0):
+    return ControlAction(node=node, timestamp=0.0, u_prev=0.0,
+                         u_next=u_next, utilization=0.5, epoch=epoch)
+
+
+def _fake_capture(n=4, t=120, seed=0):
+    rng = np.random.default_rng(seed)
+    return CapturedTrace(
+        nodes=tuple(f"n{i}" for i in range(n)),
+        interval_s=0.1,
+        demand=rng.uniform(20, 80, (n, t)) * GiB,
+        utilization=rng.uniform(0.5, 1.0, (n, t)),
+        grant=np.full((n, t), 60 * GiB),
+        residency=np.zeros((n, t)),
+        total_memory=np.full(n, 125 * GiB))
+
+
+def _saturated_plane(demand, node_memory, params, record, backend="array"):
+    """Monitors report demand + grant: the sweep's saturated store."""
+    plane = MemoryPlane(PlaneSpec(params=params, backend=backend,
+                                  record=record))
+    t = demand.shape[1]
+    for i in range(demand.shape[0]):
+        name = f"node{i}"
+        plane.attach(
+            name,
+            SimulatedMonitor(
+                name, total=float(node_memory[i]),
+                usage=lambda k, row=demand[i]: float(row[k % t]),
+                storage_used_fn=lambda nm=name: plane.capacity(nm)),
+            registry=StoreRegistry(), u0=params.u_max)
+    return plane
+
+
+# ---------------------------------------------------------------------------
+# TraceRecorder / CapturedTrace
+# ---------------------------------------------------------------------------
+
+def test_recorder_ring_is_bounded():
+    rec = TraceRecorder(capacity=8)
+    for t in range(30):
+        rec.record({"n0": _sample("n0", t * 0.1, (30 + t) * GiB)},
+                   [_action("n0", 50 * GiB)])
+    assert len(rec) == 8
+    cap = rec.snapshot(interval_s=0.1)
+    assert cap.n_intervals == 8
+    # ring retains the *last* 8 intervals
+    np.testing.assert_allclose(cap.demand[0] / GiB, np.arange(52, 60))
+    rec.clear()
+    assert len(rec) == 0
+    with pytest.raises(ValueError):
+        rec.snapshot()
+    with pytest.raises(ValueError):
+        TraceRecorder(capacity=0)
+
+
+def test_recorder_fills_node_gaps():
+    """A node missing from some intervals (late join, skipped sample)
+    is forward/backward-filled so the arrays stay rectangular."""
+    rec = TraceRecorder(capacity=16)
+    for t in range(6):
+        tick = {"a": _sample("a", t * 0.1, (10 + t) * GiB)}
+        if t >= 2:                                  # "b" joins late
+            tick["b"] = _sample("b", t * 0.1, (40 + t) * GiB)
+        if t == 4:                                  # "a" skips one
+            del tick["a"]
+        rec.record(tick, [_action(n, 50 * GiB) for n in tick])
+    cap = rec.snapshot()
+    assert cap.nodes == ("a", "b")
+    a, b = cap.demand / GiB
+    np.testing.assert_allclose(a, [10, 11, 12, 13, 13, 15])  # ffill at t=4
+    np.testing.assert_allclose(b, [42, 42, 42, 43, 44, 45])  # bfill head
+    assert np.isfinite(cap.grant).all()
+
+
+def test_capture_npz_roundtrip(tmp_path):
+    cap = _fake_capture()
+    path = tmp_path / "capture.npz"
+    cap.save(path)
+    back = CapturedTrace.load(path)
+    assert back.nodes == cap.nodes
+    assert back.interval_s == cap.interval_s
+    for f in ("demand", "utilization", "grant", "residency", "total_memory"):
+        np.testing.assert_array_equal(getattr(back, f), getattr(cap, f),
+                                      err_msg=f)
+
+
+def test_plane_capture_requires_recording():
+    plane = MemoryPlane(PlaneSpec(params=P))
+    with pytest.raises(ValueError):
+        plane.capture()
+    plane.record(capacity=4)
+    plane.attach("n0", SimulatedMonitor("n0", total=125 * GiB,
+                                        usage=lambda i: 60 * GiB),
+                 registry=StoreRegistry(), u0=30 * GiB)
+    plane.tick()
+    assert plane.capture().n_intervals == 1
+
+
+# ---------------------------------------------------------------------------
+# Replay scenarios
+# ---------------------------------------------------------------------------
+
+def test_replay_spec_same_shape_is_exact():
+    cap = _fake_capture()
+    spec = ScenarioSpec.from_capture(cap, name="exact")
+    assert spec.family == "replay"
+    np.testing.assert_array_equal(spec.build_demand(seed=3), cap.demand)
+    np.testing.assert_array_equal(spec.build_node_memory(seed=3),
+                                  cap.total_memory)
+    # a spec stays a value: hashable and replaceable
+    assert hash(spec) == hash(spec.replace())
+    assert spec.replace(n_nodes=8) != spec
+
+
+def test_replay_interpolates_and_tiles():
+    cap = _fake_capture(n=3, t=50)
+    spec = ScenarioSpec.from_capture(cap, n_nodes=10, n_intervals=200)
+    d = spec.build_demand(seed=0)
+    assert d.shape == (10, 200)
+    # captured nodes replay their (interpolated) trace: endpoints exact
+    np.testing.assert_allclose(d[:3, 0], cap.demand[:, 0])
+    np.testing.assert_allclose(d[:3, -1], cap.demand[:, -1])
+    # clones are deterministic per seed and stay in the captured range
+    np.testing.assert_array_equal(d, spec.build_demand(seed=0))
+    assert not np.array_equal(spec.build_demand(seed=1)[3:], d[3:])
+    m = spec.build_node_memory(seed=0)
+    assert m.shape == (10,)
+    np.testing.assert_array_equal(m[:3], cap.total_memory)
+
+
+def test_replay_trace_payload_validation():
+    with pytest.raises(ValueError):
+        ScenarioSpec(name="bad", family="replay")          # no payload
+    tr = ReplayTrace(np.ones((2, 4)) * GiB, 125 * GiB)
+    with pytest.raises(ValueError):
+        ScenarioSpec(name="bad", family="hpcc", replay=tr)  # wrong family
+    with pytest.raises(AttributeError):
+        tr.interval_s = 0.2                                # immutable
+    assert tr == ReplayTrace(np.ones((2, 4)) * GiB, 125 * GiB)
+
+
+def test_from_capture_fits_cache_from_residency():
+    cap = _fake_capture()
+    # no residency observed -> saturated store, and an explicit request
+    # to fit one must fail loudly
+    assert ScenarioSpec.from_capture(cap).cache is None
+    with pytest.raises(ValueError):
+        ScenarioSpec.from_capture(cap, fit_cache=True)
+    res = np.minimum(np.cumsum(np.full(cap.demand.shape, 0.25 * GiB),
+                               axis=1), 40 * GiB)
+    warm = CapturedTrace(nodes=cap.nodes, interval_s=cap.interval_s,
+                         demand=cap.demand, utilization=cap.utilization,
+                         grant=cap.grant, residency=res,
+                         total_memory=cap.total_memory)
+    cache = ScenarioSpec.from_capture(warm).cache
+    assert cache is not None
+    # residency ceiling: 0.25 GiB x 120 intervals = 30 GiB (under the
+    # 40 GiB cap) on 125 GiB nodes
+    assert cache.working_set_frac == pytest.approx(30 / 125, rel=0.01)
+    # refill flux: 0.25 GiB per 0.1 s interval = 2.5 GiB/s
+    assert cache.refill_gibps == pytest.approx(2.5, rel=0.05)
+    # and the fit is overridable
+    assert ScenarioSpec.from_capture(warm, fit_cache=False).cache is None
+    # residency that exactly tracks the grant IS the saturated store:
+    # the auto heuristic must not re-simulate warmup that never happened
+    saturated = CapturedTrace(nodes=cap.nodes, interval_s=cap.interval_s,
+                              demand=cap.demand,
+                              utilization=cap.utilization, grant=cap.grant,
+                              residency=cap.grant.copy(),
+                              total_memory=cap.total_memory)
+    assert ScenarioSpec.from_capture(saturated).cache is None
+
+
+def test_replay_roundtrip_p99_fidelity():
+    """Acceptance: the captured trace replayed through the sweep
+    reproduces the live plane's closed loop -- observed p99 within the
+    f32 + streaming-quantile tolerance."""
+    spec = get_scenario("swap-storm").replace(n_nodes=6, n_intervals=150)
+    demand = spec.build_demand(seed=0)
+    m = spec.build_node_memory(seed=0)
+    plane = _saturated_plane(demand, m, PAPER_TABLE_I, record=150)
+    for _ in range(150):
+        plane.tick()
+    cap = plane.capture()
+    replay = ScenarioSpec.from_capture(cap, name="fidelity")
+    r = run_sweep(replay, GainSet.from_params(PAPER_TABLE_I), seed=0)
+    assert abs(float(r.stats.p99_utilization[0])
+               - cap.utilization_p99()) <= 0.02
+    assert abs(float(r.stats.mean_utilization[0])
+               - float(cap.utilization.mean())) <= 0.01
+
+
+# ---------------------------------------------------------------------------
+# Hot-swap safety
+# ---------------------------------------------------------------------------
+
+def test_array_swap_updates_defaults_keeps_overrides():
+    ctrl = ArrayController(P)
+    ctrl.attach_node("plain", StoreRegistry(), u0=30 * GiB)
+    ctrl.attach_node("pinned", StoreRegistry(), u0=5 * GiB,
+                     params=P.replace(u_max=10 * GiB))
+    new = P.replace(lam=1.5, u_max=50 * GiB)
+    assert ctrl.swap_params(new) == 1
+    assert ctrl.epoch == 1
+    assert ctrl.params.lam == 1.5
+    assert ctrl._u_max[ctrl._index["plain"]] == 50 * GiB
+    assert ctrl._u_max[ctrl._index["pinned"]] == 10 * GiB   # kept
+
+
+@pytest.mark.parametrize("backend", ["scalar", "array"])
+def test_swap_mid_run_changes_the_law(backend):
+    """A plane hot-swapped to a tighter threshold must reclaim further;
+    control state carries over (no restart transient to u_max)."""
+    demand = np.full((1, 8), 80 * GiB)      # saturated: v = 80G + grant
+    plane = _saturated_plane(demand, np.array([125 * GiB]), P,
+                             record=0, backend=backend)
+    for _ in range(40):
+        a = plane.tick()[0]
+    settled = plane.capacity("node0")
+    assert a.epoch == 0
+    # u* = r0*M - d: 38.75G at the paper threshold
+    assert settled == pytest.approx(0.95 * 125 * GiB - 80 * GiB, rel=0.05)
+    # r0: 0.95 -> 0.80 moves the fixed point down to 20G
+    epoch = plane.swap_params(P.replace(r0=0.80))
+    assert epoch == 1 and plane.epoch == 1
+    for _ in range(40):
+        a = plane.tick()[0]
+    assert a.epoch == 1
+    assert plane.capacity("node0") == pytest.approx(
+        0.80 * 125 * GiB - 80 * GiB, rel=0.05)
+
+
+def test_concurrent_ticks_during_swap_are_never_torn():
+    """Acceptance: tick() racing retune-style swaps -- every interval
+    runs wholly under one epoch, one action per node per tick, epochs
+    monotone, capacities always finite."""
+    n_nodes, n_ticks = 4, 160
+    plane = MemoryPlane(PlaneSpec(params=P, backend="array"))
+    rng_demand = np.random.default_rng(0).uniform(40, 110, (n_nodes, 64))
+    for i in range(n_nodes):
+        plane.attach(f"n{i}",
+                     SimulatedMonitor(
+                         f"n{i}", total=125 * GiB,
+                         usage=lambda k, row=rng_demand[i]:
+                             float(row[k % 64] * GiB)),
+                     registry=StoreRegistry(), u0=60 * GiB)
+    audit = []
+
+    def run():
+        for _ in range(n_ticks):
+            audit.extend(plane.tick())
+
+    ticker = threading.Thread(target=run)
+    ticker.start()
+    variants = [P.replace(lam=l) for l in (1.0, 1.5, 0.25, 0.8)]
+    for v in variants:
+        time.sleep(0.02)
+        plane.swap_params(v)
+    ticker.join()
+    assert plane.epoch == len(variants)
+    per_tick = {}
+    for k, a in enumerate(audit):
+        per_tick.setdefault(k // n_nodes, []).append(a)
+        assert np.isfinite(a.u_next)
+    for i in range(n_nodes):
+        actions = [a for a in audit if a.node == f"n{i}"]
+        assert len(actions) == n_ticks            # nothing dropped/duplicated
+        epochs = [a.epoch for a in actions]
+        assert all(b >= a for a, b in zip(epochs, epochs[1:]))
+    # swaps land at interval boundaries: one epoch per whole interval
+    for k, acts in per_tick.items():
+        assert len({a.epoch for a in acts}) == 1, f"torn interval {k}"
+
+
+# ---------------------------------------------------------------------------
+# retune_online: the loop closes
+# ---------------------------------------------------------------------------
+
+def test_retune_online_swaps_the_replay_winner():
+    spec = get_scenario("swap-storm").replace(n_nodes=5, n_intervals=120)
+    demand = spec.build_demand(seed=0)
+    m = spec.build_node_memory(seed=0)
+    plane = _saturated_plane(demand, m, PAPER_TABLE_I, record=120)
+    for _ in range(120):
+        plane.tick()
+    result = retune_online(plane, name="retune-test", method="halving",
+                           budget=12, seed=0, block=True)
+    assert result.tune.score >= result.tune.baseline_score
+    assert result.old_params == PAPER_TABLE_I
+    assert result.swapped and result.epoch == 1
+    assert plane.params == result.params != PAPER_TABLE_I
+    assert plane.tick()[0].epoch == 1
+    assert "hot-swapped" in result.summary()
+
+
+def test_retune_online_respects_min_improvement():
+    """An unreachable improvement bar must leave the deployed params
+    alone (and the non-blocking handle must deliver the same result)."""
+    spec = get_scenario("swap-storm").replace(n_nodes=4, n_intervals=80)
+    demand = spec.build_demand(seed=1)
+    m = spec.build_node_memory(seed=1)
+    plane = _saturated_plane(demand, m, PAPER_TABLE_I, record=80)
+    for _ in range(80):
+        plane.tick()
+    handle = retune_online(plane, budget=8, seed=1, block=False,
+                           min_improvement=float("inf"))
+    result = handle.result(timeout=300)
+    assert handle.done
+    assert not result.swapped and result.epoch is None
+    assert plane.params == PAPER_TABLE_I and plane.epoch == 0
