@@ -296,12 +296,25 @@ def main() -> int:
     ap.add_argument("--max-regress", type=float, default=0.2)
     args = ap.parse_args()
 
+    from repro.analysis.runtime import (excess_traces, reset_trace_counts,
+                                        trace_counts)
+
+    reset_trace_counts()
     smoke_rows = bench_engines(**SMOKE_SHAPE)
     print_rows("smoke shape "
                f"({SMOKE_SHAPE['n_nodes']}x{SMOKE_SHAPE['n_intervals']})",
                smoke_rows)
 
     if args.smoke:
+        # PR 3's time-to-best claim as a checked invariant: every
+        # (chunk, horizon) shape the smoke rows dispatched must map to
+        # exactly one compiled executable (PlaneCheck recompile counter).
+        counts = trace_counts("lab.sweep.chunk")
+        excess = excess_traces("lab.sweep.chunk")
+        print(f"\nrecompile counter: {counts or '(no jitted sweeps ran)'}")
+        if excess:
+            print(f"FAIL: sweep hot path retraced: {excess}")
+            return 1
         if args.out:
             with open(args.out, "w") as fh:
                 json.dump({"smoke_reference": smoke_rows}, fh, indent=2)

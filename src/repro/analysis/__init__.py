@@ -1,0 +1,55 @@
+"""PlaneCheck: static analysis for the repo's two fragile invariants.
+
+The jitted sweep hot path must never silently sync, retrace, or
+transfer (PR 3 measured 40x+ XLA CPU regressions when it does), and
+the MemoryPlane's lock/epoch protocol must never tear a control
+interval (PR 5's swap machinery).  Both were guarded by convention and
+benchmarks; this package makes them machine-checked:
+
+* :mod:`.tracelint` -- walks functions reachable from ``jax.jit`` /
+  ``lax.scan`` / ``shard_map`` call sites and flags host syncs, host
+  casts, Python control flow on traced values, numpy calls on traced
+  arrays, float64 promotion in the streaming accumulators, in-jit
+  sort/scatter, and jit-in-loop retrace risk (rules ``PC-T001`` ..
+  ``PC-T007``).
+* :mod:`.locklint` -- extracts the lock-acquisition graph plus
+  ``# guarded-by: <lock>`` field annotations and reports lock-order
+  inversions, guarded fields mutated without their lock, and blocking
+  work performed while holding a lock (rules ``PC-L001`` ..
+  ``PC-L003``).
+* :mod:`.runtime` -- the thin runtime-sanitizer layer: trace-time
+  recompile counters and a ``jax.transfer_guard`` context for the
+  sweep dispatch loop, both enabled by ``PLANECHECK_SANITIZERS=1``.
+
+Pure stdlib (``ast``); importing this package never imports jax.  Run
+the CLI with ``python -m repro.analysis --check src/`` -- findings not
+listed in ``PLANECHECK_BASELINE.json`` (each entry justified) fail the
+gate.  Suppress a single line with ``# planecheck: ignore[RULE]``.
+"""
+
+from .findings import Baseline, Finding, RULES
+from .locklint import analyze_locks
+from .tracelint import analyze_traced
+
+__all__ = [
+    "Baseline",
+    "Finding",
+    "RULES",
+    "analyze_locks",
+    "analyze_traced",
+    "run",
+]
+
+
+def run(paths, baseline=None):
+    """Analyze ``paths`` with both pass families.
+
+    Returns ``(findings, new)`` where ``new`` is the subset not covered
+    by ``baseline`` (all of them when no baseline is given).
+    """
+    findings = sorted(
+        analyze_traced(paths) + analyze_locks(paths),
+        key=lambda f: (f.file, f.line, f.rule))
+    if baseline is None:
+        return findings, list(findings)
+    return findings, [f for f in findings if not baseline.covers(f)]

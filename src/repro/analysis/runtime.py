@@ -1,0 +1,102 @@
+"""PlaneCheck runtime sanitizers: recompile counters + transfer guard.
+
+The static passes prove properties of the source; this thin layer
+checks the two invariants that only manifest at run time:
+
+* **Recompile counters** -- :func:`record_trace` is called *inside*
+  jitted function bodies, so it executes exactly once per trace (Python
+  in a traced body runs at trace time only).  A hot path that silently
+  retraces -- a non-hashable static arg, a shape drifting per call --
+  shows up as a count > 1 for the same key, with no dependence on any
+  version-fragile jit-cache introspection API.
+  ``benchmarks/lab_bench.py --smoke`` and the pytest sanitizer fixture
+  assert one executable per (chunk, horizon) shape from these counts.
+
+* **Transfer guard** -- :func:`dispatch_guard` wraps the sweep's chunk
+  dispatch loop in ``jax.transfer_guard_host_to_device("disallow")``
+  when sanitizers are enabled, so an accidental per-chunk host->device
+  transfer (the regression class PR 3 hand-audited) raises instead of
+  silently serializing every dispatch.
+
+Both are no-ops unless ``PLANECHECK_SANITIZERS`` is set to a truthy
+value (``1``/``true``/``on``), so production and benchmark hot paths
+pay nothing.  This module must stay importable without jax -- jax is
+imported lazily inside :func:`dispatch_guard` only.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+from typing import Dict, Optional, Tuple
+
+_ENV_VAR = "PLANECHECK_SANITIZERS"
+
+_counts_lock = threading.Lock()
+_counts: Dict[Tuple[str, Tuple[Tuple[str, object], ...]], int] = {}
+
+
+def sanitizers_enabled() -> bool:
+    """Are the runtime sanitizers switched on (``PLANECHECK_SANITIZERS``)?"""
+    return os.environ.get(_ENV_VAR, "").strip().lower() in (
+        "1", "true", "yes", "on")
+
+
+def record_trace(name: str, **dims) -> None:
+    """Count one tracing of the call site keyed by ``(name, dims)``.
+
+    Call from inside a jitted/scanned function body with *concrete*
+    dims (shapes, flags -- never traced values); each retrace of the
+    surrounding program increments the key once.  Always counts, even
+    with sanitizers off -- a dict update per XLA *compile* is free.
+    """
+    key = (name, tuple(sorted(dims.items())))
+    with _counts_lock:
+        _counts[key] = _counts.get(key, 0) + 1
+
+
+def trace_counts(prefix: Optional[str] = None) -> Dict[str, int]:
+    """Snapshot of recompile counts, formatted ``name{k=v,...}`` -> n."""
+    with _counts_lock:
+        items = list(_counts.items())
+    out = {}
+    for (name, dims), n in items:
+        if prefix is not None and not name.startswith(prefix):
+            continue
+        label = name
+        if dims:
+            label += "{" + ",".join(f"{k}={v}" for k, v in dims) + "}"
+        out[label] = n
+    return out
+
+
+def reset_trace_counts() -> None:
+    with _counts_lock:
+        _counts.clear()
+
+
+def excess_traces(prefix: str) -> Dict[str, int]:
+    """Keys under ``prefix`` traced more than once (retrace suspects)."""
+    return {k: n for k, n in trace_counts(prefix).items() if n > 1}
+
+
+@contextlib.contextmanager
+def dispatch_guard():
+    """Disallow implicit transfers around a dispatch loop (when enabled).
+
+    With sanitizers off this is a free no-op; with them on, any
+    implicit host<->device transfer inside the block raises.  Callers
+    must stage every operand device-side (and warm the executable)
+    before entering.
+    """
+    if not sanitizers_enabled():
+        yield
+        return
+    import jax
+    # Host->device only: the sharded sweep legitimately reshards
+    # replicated operands across the mesh (device-to-device) at
+    # dispatch, and results come back device-to-host.  The regression
+    # class this guards against is per-chunk host staging.
+    with jax.transfer_guard_host_to_device("disallow"):
+        yield

@@ -110,8 +110,8 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         os.makedirs(directory, exist_ok=True)
-        self._staged_bytes = 0.0
-        self._capacity = float("inf")
+        self._staged_bytes = 0.0           # guarded-by: _lock
+        self._capacity = float("inf")      # guarded-by: _lock
         self._thread: Optional[threading.Thread] = None
         self._lock = threading.Lock()
 
@@ -124,14 +124,20 @@ class CheckpointManager:
 
     def set_capacity(self, capacity: float):
         from ..core.store import EvictionReport
-        self._capacity = capacity
+        with self._lock:
+            self._capacity = capacity
+            over = self._staged_bytes > capacity
         # A shrink below current staging forces the pending async save to
-        # complete synchronously (flush) rather than grow.
+        # complete synchronously (flush) rather than grow.  The join
+        # happens outside the lock: the save thread takes _lock itself
+        # to clear staging, so waiting while holding it would deadlock
+        # the moment the save path and set_capacity race.
         report = EvictionReport(self.name, capacity, capacity)
-        if self._staged_bytes > capacity:
+        if over:
             self.wait()
-            report.evicted_bytes = self._staged_bytes
-            self._staged_bytes = 0.0
+            with self._lock:
+                report.evicted_bytes = self._staged_bytes
+                self._staged_bytes = 0.0
         return report
 
     # -- save/restore ---------------------------------------------------------

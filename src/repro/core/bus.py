@@ -24,12 +24,13 @@ class MessageBus:
     def __init__(self, retention: int = 4096):
         self._lock = threading.RLock()
         self._retention = retention
-        self._log: Dict[str, deque] = defaultdict(
+        self._log: Dict[str, deque] = defaultdict(   # guarded-by: _lock
             lambda: deque(maxlen=retention))
-        self._offsets: Dict[str, int] = defaultdict(int)  # total published
-        self._subs: Dict[str, List[Callable[[Any], None]]] = defaultdict(list)
-        self._cursors: Dict[Tuple[str, str], int] = {}
-        self.errors: List[Tuple[str, Exception]] = []
+        self._offsets: Dict[str, int] = defaultdict(int)  # guarded-by: _lock
+        self._subs: Dict[str, List[Callable[[Any], None]]] = \
+            defaultdict(list)                        # guarded-by: _lock
+        self._cursors: Dict[Tuple[str, str], int] = {}  # guarded-by: _lock
+        self.errors: List[Tuple[str, Exception]] = []   # guarded-by: _lock
 
     # -- producer side ---------------------------------------------------
     def publish(self, topic: str, message: Any) -> None:

@@ -88,9 +88,9 @@ class ActionHistory:
             raise ValueError("history bound must be >= 1")
         self.maxlen = maxlen
         self._lock = threading.Lock()
-        self._log: deque = deque(maxlen=maxlen)
+        self._log: deque = deque(maxlen=maxlen)     # guarded-by: _lock
         self._track_fresh = track_fresh
-        self._fresh: List[ControlAction] = []
+        self._fresh: List[ControlAction] = []       # guarded-by: _lock
 
     def append(self, action: ControlAction) -> None:
         with self._lock:
@@ -143,12 +143,12 @@ class DynIMSController:
         max_history: int = DEFAULT_HISTORY,
         track_fresh: bool = False,
     ) -> None:
-        self.params = params
+        self.params = params                        # guarded-by: _lock
         self.signal = Signal.coerce(signal)
-        self._nodes: Dict[str, _NodeState] = {}
+        self._nodes: Dict[str, _NodeState] = {}     # guarded-by: _lock
         self._bus = bus
         self._lock = threading.RLock()
-        self._epoch = 0
+        self._epoch = 0                             # guarded-by: _lock
         self._history = ActionHistory(max_history, track_fresh=track_fresh)
         if bus is not None:
             bus.subscribe(AGG_TOPIC, self._on_agg)

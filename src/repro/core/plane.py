@@ -58,6 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis.runtime import record_trace
 from .bus import MessageBus
 from .control import ControllerParams, Signal, vectorized_step
 from .controller import (ActionHistory, CONTROL_TOPIC, ControlAction,
@@ -155,7 +156,7 @@ class TraceRecorder:
             raise ValueError("capacity must be >= 1")
         self.capacity = capacity
         self._lock = threading.Lock()
-        self._ring: deque = deque(maxlen=capacity)
+        self._ring: deque = deque(maxlen=capacity)  # guarded-by: _lock
 
     def __len__(self) -> int:
         with self._lock:
@@ -338,6 +339,9 @@ def make_fused_step(params: ControllerParams):
     ff = params.feedforward
 
     def fused(u, v, v_prev, has_prev, mask, m, u_min, u_max):
+        # Trace-time recompile counter: fires once per XLA compile, so
+        # the sanitizer fixtures can assert the fleet shape is stable.
+        record_trace("plane.fused_step", nodes=int(u.shape[0]))
         # A node with no previous observation runs without feedforward:
         # substituting v for v_prev zeroes the slope term exactly.
         vp = jnp.where(has_prev, v_prev, v) if ff > 0.0 else None
@@ -375,23 +379,23 @@ class ArrayController:
         signal: Signal | str = Signal.LATEST,
         max_history: int = DEFAULT_HISTORY,
     ) -> None:
-        self.params = params
+        self.params = params                      # guarded-by: _lock
         self.signal = Signal.coerce(signal)
         self._bus = bus
         self._lock = threading.RLock()
-        self._epoch = 0
+        self._epoch = 0                           # guarded-by: _lock
         self._history = ActionHistory(max_history)
-        self._names: List[str] = []
-        self._index: Dict[str, int] = {}
-        self._registries: List[StoreRegistry] = []
-        self._u = np.zeros(0, np.float64)
-        self._v_prev = np.zeros(0, np.float64)
-        self._has_prev = np.zeros(0, bool)
-        self._m = np.zeros(0, np.float64)
-        self._u_min = np.zeros(0, np.float64)
-        self._u_max = np.zeros(0, np.float64)
-        self._pending: Dict[str, AggregatedMetrics] = {}
-        self._fused = make_fused_step(params)
+        self._names: List[str] = []               # guarded-by: _lock
+        self._index: Dict[str, int] = {}          # guarded-by: _lock
+        self._registries: List[StoreRegistry] = []  # guarded-by: _lock
+        self._u = np.zeros(0, np.float64)         # guarded-by: _lock
+        self._v_prev = np.zeros(0, np.float64)    # guarded-by: _lock
+        self._has_prev = np.zeros(0, bool)        # guarded-by: _lock
+        self._m = np.zeros(0, np.float64)         # guarded-by: _lock
+        self._u_min = np.zeros(0, np.float64)     # guarded-by: _lock
+        self._u_max = np.zeros(0, np.float64)     # guarded-by: _lock
+        self._pending: Dict[str, AggregatedMetrics] = {}  # guarded-by: _lock
+        self._fused = make_fused_step(params)     # guarded-by: _lock
         if bus is not None:
             bus.subscribe(AGG_TOPIC, self.observe)
 
@@ -593,14 +597,14 @@ class MemoryPlane:
             self.controller = ArrayController(
                 spec.params, bus=self.bus, signal=spec.signal,
                 max_history=spec.history)
-        self._monitors: Dict[str, MemoryMonitor] = {}
+        self._monitors: Dict[str, MemoryMonitor] = {}  # guarded-by: _lock
         self._lock = threading.RLock()
         # Serializes whole control intervals against hot-swaps: tick()
         # holds it for the full sample -> decide -> actuate pipeline, so
         # swap_params always lands at an interval boundary (never a
         # half-updated fleet).
         self._tick_lock = threading.Lock()
-        self.recorder: Optional[TraceRecorder] = (
+        self.recorder: Optional[TraceRecorder] = (  # guarded-by: _tick_lock
             TraceRecorder(spec.record) if spec.record else None)
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -689,9 +693,14 @@ class MemoryPlane:
         return self.controller.epoch
 
     def record(self, capacity: int = DEFAULT_TRACE_CAPACITY) -> TraceRecorder:
-        """Start (or restart) trace capture; returns the live recorder."""
-        self.recorder = TraceRecorder(capacity)
-        return self.recorder
+        """Start (or restart) trace capture; returns the live recorder.
+
+        Swaps under the tick lock so a concurrently running interval
+        never records half to the old ring and half to the new one.
+        """
+        with self._tick_lock:
+            self.recorder = TraceRecorder(capacity)
+            return self.recorder
 
     def capture(self) -> CapturedTrace:
         """Snapshot the recorded ring as a :class:`CapturedTrace`.

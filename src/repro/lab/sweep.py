@@ -56,6 +56,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..analysis.runtime import (dispatch_guard, record_trace,
+                                sanitizers_enabled)
+
 try:                                    # jax >= 0.5 exposes it at top level
     _shard_map = jax.shard_map
 except AttributeError:
@@ -358,6 +361,12 @@ def _chunk_stats(demand_tn, m, r0, lam, lam_grant, u_min, u_max, deadband,
     (chunk, T, specialization, cache spec) tuple maps to exactly one
     executable.
     """
+    # Trace-time only (Python in a jitted body runs once per compile):
+    # the recompile counter the sanitizer fixtures and --smoke assert on.
+    record_trace("lab.sweep.chunk", chunk=int(r0.shape[0]),
+                 horizon=int(demand_tn.shape[0]),
+                 nodes=int(demand_tn.shape[1]),
+                 paper_law=bool(paper_law), cache=cache is not None)
     demand_tn = jnp.asarray(demand_tn, jnp.float32)
     m = jnp.asarray(m, jnp.float32)
     inv_m = 1.0 / m
@@ -549,17 +558,33 @@ def sweep_demand(
     plan = plan_specialization(gains, occupancy)
     fn = _compiled_sweep(devs, plan.paper_law, plan.unit_occupancy,
                          plan.static_bounds, cache)
-    iv = np.float32(interval_s)
-    occ = np.float32(occupancy)
-    # one host->device transfer of the shared arrays, not one per chunk
+    # Stage every operand device-side (f32) exactly once.  The gain
+    # columns used to go up as numpy float64 slices -- a silent
+    # H2D transfer + cast per chunk per array -- so chunks are now
+    # sliced on device and the loop body is transfer-free, which
+    # dispatch_guard() (PLANECHECK_SANITIZERS=1) enforces with
+    # jax.transfer_guard("disallow").
     demand_dev = jnp.asarray(demand_tn)
     m_dev = jnp.asarray(m)
+    gain_dev = [jnp.asarray(getattr(gains, f.name), jnp.float32)
+                for f in dataclasses.fields(GainSet)]
+    iv = jnp.asarray(np.float32(interval_s))
+    occ = jnp.asarray(np.float32(occupancy))
+
+    # Device-side chunk slices, materialized before the guard (each
+    # distinct slice bound compiles its own tiny getitem executable,
+    # whose constants would otherwise transfer inside the guard).
+    cols_per_chunk = [[a[lo:lo + chunk] for a in gain_dev]
+                     for lo in range(0, len(gains), chunk)]
+    if sanitizers_enabled():
+        # Compile (and its constant transfers) happen outside the guard;
+        # the guarded loop below then replays only cached executables.
+        jax.block_until_ready(
+            fn(demand_dev, m_dev, *cols_per_chunk[0], iv, occ))
     pending = []
-    for lo in range(0, len(gains), chunk):
-        g = gains.slice(lo, lo + chunk)
-        pending.append(fn(demand_dev, m_dev, g.r0, g.lam, g.lam_grant,
-                          g.u_min, g.u_max, g.deadband, g.feedforward,
-                          iv, occ))
+    with dispatch_guard():
+        for cols in cols_per_chunk:
+            pending.append(fn(demand_dev, m_dev, *cols, iv, occ))
     chunks = [jax.tree_util.tree_map(np.asarray, st) for st in pending]
     return FleetStats(*(np.concatenate([getattr(c, f)
                                         for c in chunks])[:n_real]

@@ -431,8 +431,10 @@ class RetuneHandle:
     """Join handle on a background :func:`retune_online` round."""
 
     def __init__(self, thread: threading.Thread, box: dict):
+        # The box is written only by the round thread and read only
+        # after join() -- synchronized by the join, not by a lock.
         self._thread = thread
-        self._box = box
+        self._box = box          # guarded-by: join(_thread)
 
     @property
     def done(self) -> bool:

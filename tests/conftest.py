@@ -1,0 +1,39 @@
+"""Shared fixtures: the PlaneCheck runtime-sanitizer hooks.
+
+With ``PLANECHECK_SANITIZERS=1`` in the environment (the CI
+fast-suites job sets it), ``repro.lab.sweep`` dispatches its chunk
+loop under ``jax.transfer_guard("disallow")`` and the session-end gate
+below asserts the sweep hot path compiled exactly once per
+(chunk, horizon, nodes, specialization) shape.  Locally both are
+no-ops unless the variable is exported.
+"""
+
+import pytest
+
+from repro.analysis import runtime as pc_runtime
+
+
+@pytest.fixture
+def planecheck_sanitizers(monkeypatch):
+    """Force-enable the runtime sanitizers for one test."""
+    monkeypatch.setenv("PLANECHECK_SANITIZERS", "1")
+    return pc_runtime
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _recompile_gate():
+    """Whole-run recompile gate over the sweep hot path.
+
+    Scoped to ``lab.sweep.chunk``: its executable cache is keyed by
+    (devices, specialization, cache) + input shapes, so within one
+    process every counter key must trace exactly once.  (The
+    ``plane.fused_step`` counter is *not* gated here -- tests build
+    many planes, and each ``make_fused_step`` call legitimately
+    compiles its own instance at the same fleet size.)
+    """
+    yield
+    if pc_runtime.sanitizers_enabled():
+        excess = pc_runtime.excess_traces("lab.sweep.chunk")
+        assert not excess, (
+            "sweep hot path retraced (same shape compiled more than "
+            f"once): {excess}")
