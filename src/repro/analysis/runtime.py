@@ -9,8 +9,10 @@ checks the two invariants that only manifest at run time:
   retraces -- a non-hashable static arg, a shape drifting per call --
   shows up as a count > 1 for the same key, with no dependence on any
   version-fragile jit-cache introspection API.
-  ``benchmarks/lab_bench.py --smoke`` and the pytest sanitizer fixture
-  assert one executable per (chunk, horizon) shape from these counts.
+  ``benchmarks/lab_bench.py --smoke`` and the pytest sanitizer hooks
+  assert one executable per counter key from these counts, so every
+  call site must key on the *full* specialization its executable cache
+  uses (shapes plus static args/devices), not a projection of it.
 
 * **Transfer guard** -- :func:`dispatch_guard` wraps the sweep's chunk
   dispatch loop in ``jax.transfer_guard_host_to_device("disallow")``
@@ -48,9 +50,16 @@ def record_trace(name: str, **dims) -> None:
 
     Call from inside a jitted/scanned function body with *concrete*
     dims (shapes, flags -- never traced values); each retrace of the
-    surrounding program increments the key once.  Always counts, even
-    with sanitizers off -- a dict update per XLA *compile* is free.
+    surrounding program increments the key once.  A no-op with
+    sanitizers off, so a long-lived production process never grows the
+    count dict (``plane.fused_step`` records one key per fleet size).
+    The flag is read at *trace* time: enable it before the first
+    dispatch (as the CI env, the pytest fixture, and ``lab_bench
+    --smoke`` all do), because an executable compiled while it was off
+    sits in the jit cache and is never re-traced, hence never counted.
     """
+    if not sanitizers_enabled():
+        return
     key = (name, tuple(sorted(dims.items())))
     with _counts_lock:
         _counts[key] = _counts.get(key, 0) + 1

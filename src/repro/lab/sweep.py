@@ -48,6 +48,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 import time
 from typing import NamedTuple, Optional, Sequence, Tuple, Union
 
@@ -352,21 +353,27 @@ def _chunk_stats(demand_tn, m, r0, lam, lam_grant, u_min, u_max, deadband,
                  feedforward, interval_s, occupancy, *, paper_law: bool,
                  unit_occupancy: bool,
                  static_bounds: Optional[Tuple[float, float]],
-                 cache: Optional[CacheSpec]):
+                 cache: Optional[CacheSpec], spec: str = ""):
     """One gain chunk: scan over T, vmap over gains -> (G,)-field stats.
 
     ``demand_tn`` is ``(T, N)`` bytes (shared by every gain point),
     ``m`` is ``(N,)`` bytes, gain arrays are ``(G,)``; ``interval_s``
     and ``occupancy`` ride along as traced scalars so every
     (chunk, T, specialization, cache spec) tuple maps to exactly one
-    executable.
+    executable.  ``spec`` is :func:`_spec_digest` of the enclosing
+    :func:`_compiled_sweep` cache key, so the recompile-counter key
+    below distinguishes every legitimately separate executable.
     """
     # Trace-time only (Python in a jitted body runs once per compile):
-    # the recompile counter the sanitizer fixtures and --smoke assert on.
+    # the recompile counter the sanitizer fixtures and --smoke assert
+    # on.  The key must be one-to-one with the executable cache key --
+    # shapes from the operands, everything else (devices, plan, full
+    # CacheSpec) folded into the spec digest -- or distinct CacheSpecs
+    # at the same shape would false-positive the gate.
     record_trace("lab.sweep.chunk", chunk=int(r0.shape[0]),
                  horizon=int(demand_tn.shape[0]),
                  nodes=int(demand_tn.shape[1]),
-                 paper_law=bool(paper_law), cache=cache is not None)
+                 paper_law=bool(paper_law), spec=spec)
     demand_tn = jnp.asarray(demand_tn, jnp.float32)
     m = jnp.asarray(m, jnp.float32)
     inv_m = 1.0 / m
@@ -386,6 +393,23 @@ def _chunk_stats(demand_tn, m, r0, lam, lam_grant, u_min, u_max, deadband,
         jnp.asarray(feedforward, jnp.float32))
 
 
+def _spec_digest(devices: Tuple, paper_law: bool, unit_occupancy: bool,
+                 static_bounds: Optional[Tuple[float, float]],
+                 cache: Optional[CacheSpec]) -> str:
+    """Short stable digest of one :func:`_compiled_sweep` cache key.
+
+    Folded into the ``lab.sweep.chunk`` recompile-counter dims so the
+    counter key is one-to-one with the executables that legitimately
+    exist: two :class:`CacheSpec`\\ s (or device tuples, or bound
+    specializations) at the same shape compile separately and must
+    count separately.  ``repr`` of a frozen dataclass / device string
+    is deterministic, so the digest is stable across processes too.
+    """
+    key = repr((tuple(str(d) for d in devices), paper_law,
+                unit_occupancy, static_bounds, cache))
+    return hashlib.sha1(key.encode()).hexdigest()[:12]
+
+
 @functools.lru_cache(maxsize=None)
 def _compiled_sweep(devices: Tuple, paper_law: bool, unit_occupancy: bool,
                     static_bounds: Optional[Tuple[float, float]],
@@ -399,7 +423,10 @@ def _compiled_sweep(devices: Tuple, paper_law: bool, unit_occupancy: bool,
     """
     fn = functools.partial(_chunk_stats, paper_law=paper_law,
                            unit_occupancy=unit_occupancy,
-                           static_bounds=static_bounds, cache=cache)
+                           static_bounds=static_bounds, cache=cache,
+                           spec=_spec_digest(devices, paper_law,
+                                             unit_occupancy, static_bounds,
+                                             cache))
     if len(devices) <= 1:
         return jax.jit(fn)
     mesh = Mesh(np.asarray(devices), ("gains",))

@@ -1,16 +1,27 @@
-"""Shared fixtures: the PlaneCheck runtime-sanitizer hooks.
+"""Shared fixtures + hooks: the PlaneCheck runtime-sanitizer gates.
 
 With ``PLANECHECK_SANITIZERS=1`` in the environment (the CI
 fast-suites job sets it), ``repro.lab.sweep`` dispatches its chunk
-loop under ``jax.transfer_guard("disallow")`` and the session-end gate
-below asserts the sweep hot path compiled exactly once per
-(chunk, horizon, nodes, specialization) shape.  Locally both are
-no-ops unless the variable is exported.
+loop under ``jax.transfer_guard("disallow")`` and the session-level
+hooks below assert the sweep hot path compiled exactly once per
+counter key -- (chunk, horizon, nodes) shape plus the specialization
+digest of its executable cache entry.  Locally both are no-ops unless
+the variable is exported.
+
+The gate reports through ``pytest_terminal_summary`` and fails the
+run via ``pytest_sessionfinish`` -- not from a fixture teardown, which
+would surface as an ERROR on whichever test happened to run last and
+bury the actual cause.
 """
 
 import pytest
 
 from repro.analysis import runtime as pc_runtime
+
+# Only the sweep hot path is gated.  The ``plane.fused_step`` counter
+# is *not*: tests build many planes, and each ``make_fused_step`` call
+# legitimately compiles its own instance at the same fleet size.
+_GATED_PREFIX = "lab.sweep.chunk"
 
 
 @pytest.fixture
@@ -20,20 +31,28 @@ def planecheck_sanitizers(monkeypatch):
     return pc_runtime
 
 
-@pytest.fixture(scope="session", autouse=True)
-def _recompile_gate():
-    """Whole-run recompile gate over the sweep hot path.
+def _gate_excess():
+    if not pc_runtime.sanitizers_enabled():
+        return {}
+    return pc_runtime.excess_traces(_GATED_PREFIX)
 
-    Scoped to ``lab.sweep.chunk``: its executable cache is keyed by
-    (devices, specialization, cache) + input shapes, so within one
-    process every counter key must trace exactly once.  (The
-    ``plane.fused_step`` counter is *not* gated here -- tests build
-    many planes, and each ``make_fused_step`` call legitimately
-    compiles its own instance at the same fleet size.)
-    """
-    yield
-    if pc_runtime.sanitizers_enabled():
-        excess = pc_runtime.excess_traces("lab.sweep.chunk")
-        assert not excess, (
-            "sweep hot path retraced (same shape compiled more than "
-            f"once): {excess}")
+
+def pytest_terminal_summary(terminalreporter, exitstatus, config):
+    excess = _gate_excess()
+    if not excess:
+        return
+    terminalreporter.section("PlaneCheck recompile gate", sep="=", red=True)
+    terminalreporter.write_line(
+        "sweep hot path retraced -- the same executable-cache key "
+        "compiled more than once this session:")
+    for key, n in sorted(excess.items()):
+        terminalreporter.write_line(f"  {key}: {n} traces")
+    terminalreporter.write_line(
+        "Each key is (shape dims + specialization digest); a count > 1 "
+        "means a retrace leak (shape drift, non-hashable static arg, or "
+        "a counter key coarser than the jit cache key).")
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if _gate_excess():
+        session.exitstatus = 1

@@ -513,7 +513,7 @@ def test_cli_check_exits_zero_on_tree(monkeypatch):
 # Runtime sanitizers
 # ---------------------------------------------------------------------------
 
-def test_record_trace_counts_and_excess():
+def test_record_trace_counts_and_excess(planecheck_sanitizers):
     reset_trace_counts()
     record_trace("unit.test", shape=4)
     record_trace("unit.test", shape=4)
@@ -523,6 +523,15 @@ def test_record_trace_counts_and_excess():
     assert excess_traces("unit.test") == {"unit.test{shape=4}": 2}
     reset_trace_counts()
     assert trace_counts("unit.test") == {}
+
+
+def test_record_trace_noop_when_disabled(monkeypatch):
+    # the counter dict must not grow in a production process (one key
+    # per fleet size from plane.fused_step would accumulate forever)
+    monkeypatch.delenv("PLANECHECK_SANITIZERS", raising=False)
+    reset_trace_counts()
+    record_trace("unit.disabled", shape=4)
+    assert trace_counts("unit.disabled") == {}
 
 
 def test_dispatch_guard_noop_when_disabled(monkeypatch):
@@ -542,7 +551,7 @@ def test_dispatch_guard_blocks_implicit_transfers(planecheck_sanitizers):
             jnp.sum(host).block_until_ready()
 
 
-def test_sweep_compiles_once_per_shape():
+def test_sweep_compiles_once_per_shape(planecheck_sanitizers):
     pytest.importorskip("jax")
     from repro.core.cluster_sim import paper_controller_params
     from repro.core.traces import fleet_demand_traces
@@ -561,7 +570,7 @@ def test_sweep_compiles_once_per_shape():
     assert excess_traces("lab.sweep.chunk") == {}
 
 
-def test_fused_step_compiles_once_per_fleet_shape():
+def test_fused_step_compiles_once_per_fleet_shape(planecheck_sanitizers):
     jnp = pytest.importorskip("jax.numpy")
     from repro.core.control import ControllerParams
     from repro.core.plane import make_fused_step
