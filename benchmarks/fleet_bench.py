@@ -1,0 +1,250 @@
+"""FleetPlane sweep-engine benchmarks.
+
+Times the fused two-level closed loop -- per-tenant Eq. 1 inside
+epoch-arbitrated budgets -- against the scalar float64 oracle, and
+maps the fused path's throughput over the (tenants x nodes) plane:
+
+* ``fleet_reference``   -- :func:`repro.fleet.fleet_reference`: dense
+  numpy per-gain loops, arbitration per epoch, exact semantics.
+* ``fleet_sweep_G``     -- :func:`repro.fleet.fleet_sweep_demand`: the
+  whole (gains x tenants x nodes x intervals) grid as jitted nested
+  scans with fused one-hot arbitration, histories never leaving the
+  device.
+* ``scaling_KxN``       -- fused-path rows over a tenants x nodes
+  grid at fixed total work, showing where the batched arbitration
+  unroll (O(K^2) per epoch) starts to bite.
+
+The figure of merit is **tenant*node*interval*config closed-loop
+updates per second**.  Writes ``BENCH_fleet.json`` at the repo root
+with the headline + scaling rows plus a ``smoke_reference`` section
+the CI bench-smoke job re-measures.
+
+Usage:
+
+    PYTHONPATH=src python benchmarks/fleet_bench.py
+    PYTHONPATH=src python benchmarks/fleet_bench.py --smoke \
+        --check-baseline BENCH_fleet.json   # CI regression gate
+
+The smoke run times the small reference shape only and, with
+``--check-baseline``, fails if the fused sweep's speedup over the
+same-run ``fleet_reference`` row regresses more than ``--max-regress``
+(default 20%) against the checked-in ``smoke_reference`` -- the
+ratio-of-ratios normalization keeps the gate honest across machines.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+REPEATS = 3
+SMOKE_SHAPE = dict(n_tenants=3, n_nodes=64, n_intervals=240, n_configs=9)
+SCALING_GRID = ((2, 256), (4, 256), (8, 256), (4, 1024), (8, 1024))
+
+
+def _best(fn) -> float:
+    """Best-of-N wall time, after a warmup call that pays compilation."""
+    fn()
+    times = []
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return min(times)
+
+
+def _row(name: str, n_tenants: int, n_nodes: int, n_intervals: int,
+         configs: int, elapsed: float, **extra) -> dict:
+    work = n_tenants * n_nodes * n_intervals * configs
+    return {"engine": name, "n_tenants": n_tenants, "n_nodes": n_nodes,
+            "n_intervals": n_intervals, "n_configs": configs,
+            "elapsed_s": elapsed, "throughput_upd_per_s": work / elapsed,
+            **extra}
+
+
+def _problem(n_tenants: int, n_nodes: int, n_intervals: int, seed: int = 0):
+    """Decorrelated per-tenant demand plus Table-I-ish fleet shape."""
+    from repro.core.traces import GiB, fleet_demand_traces
+
+    demand = np.stack([
+        fleet_demand_traces(n_nodes, n_intervals, 0.1, seed=seed + k * 7919)
+        for k in range(n_tenants)])
+    weights = np.linspace(3.0, 1.0, n_tenants)
+    floors = np.zeros(n_tenants)
+    floors[-1] = 8.0 * GiB
+    return demand, weights, floors
+
+
+def _bench_gains(n_configs: int):
+    from repro.core.cluster_sim import paper_controller_params
+    from repro.lab import grid_gains
+    k = max(int(np.sqrt(n_configs)), 2)
+    return grid_gains(paper_controller_params(),
+                      lam=np.linspace(0.1, 1.8, k),
+                      r0=np.linspace(0.88, 0.98, k))
+
+
+def bench_engines(n_tenants: int, n_nodes: int, n_intervals: int,
+                  n_configs: int, seed: int = 0) -> list:
+    """Reference vs fused at one (tenants, nodes, intervals) shape."""
+    from repro.core.traces import GiB
+    from repro.fleet import fleet_reference, fleet_sweep_demand
+
+    demand, weights, floors = _problem(n_tenants, n_nodes, n_intervals,
+                                       seed)
+    gains = _bench_gains(n_configs)
+    kw = dict(node_memory=125.0 * GiB, weights=weights, floors=floors,
+              epoch_intervals=max(n_intervals // 10, 1), interval_s=0.1)
+    rows = [
+        _row("fleet_reference", n_tenants, n_nodes, n_intervals,
+             len(gains),
+             _best(lambda: fleet_reference(demand, gains, **kw))),
+        _row(f"fleet_sweep_{len(gains)}", n_tenants, n_nodes, n_intervals,
+             len(gains),
+             _best(lambda: fleet_sweep_demand(demand, gains, **kw))),
+    ]
+    base = rows[0]["throughput_upd_per_s"]
+    for r in rows:
+        r["speedup_vs_reference"] = r["throughput_upd_per_s"] / base
+    return rows
+
+
+def bench_scaling(n_intervals: int, n_configs: int, seed: int = 0) -> list:
+    """Fused-path throughput over the (tenants x nodes) plane."""
+    from repro.core.traces import GiB
+    from repro.fleet import fleet_sweep_demand
+
+    gains = _bench_gains(n_configs)
+    rows = []
+    for n_tenants, n_nodes in SCALING_GRID:
+        demand, weights, floors = _problem(n_tenants, n_nodes,
+                                           n_intervals, seed)
+        kw = dict(node_memory=125.0 * GiB, weights=weights, floors=floors,
+                  epoch_intervals=max(n_intervals // 10, 1),
+                  interval_s=0.1)
+        el = _best(lambda: fleet_sweep_demand(demand, gains, **kw))
+        rows.append(_row(f"scaling_{n_tenants}x{n_nodes}", n_tenants,
+                         n_nodes, n_intervals, len(gains), el))
+    base = rows[0]["throughput_upd_per_s"]
+    for r in rows:
+        r["throughput_vs_first"] = r["throughput_upd_per_s"] / base
+    return rows
+
+
+def check_baseline(smoke_rows: list, baseline_path: str,
+                   max_regress: float) -> int:
+    """Gate the fused sweep's speedup over the same-run reference row
+    against the checked-in ``smoke_reference`` (ratio of ratios)."""
+    with open(baseline_path) as fh:
+        doc = json.load(fh)
+    ref = {r["engine"]: r for r in doc.get("smoke_reference") or []}
+    now = {r["engine"]: r for r in smoke_rows}
+    names = [n for n in now if n.startswith("fleet_sweep") and n in ref]
+    if not names:
+        print(f"# no comparable smoke_reference sweep row in "
+              f"{baseline_path}; nothing to check")
+        return 0
+    failed = False
+    for name in names:
+        ref_ratio = ref[name]["speedup_vs_reference"]
+        now_ratio = now[name]["speedup_vs_reference"]
+        floor = ref_ratio * (1.0 - max_regress)
+        ok = now_ratio >= floor
+        failed |= not ok
+        print(f"# {name} speedup vs fleet_reference: now {now_ratio:.2f}x, "
+              f"baseline {ref_ratio:.2f}x, floor {floor:.2f}x -> "
+              f"{'OK' if ok else 'REGRESSION'}")
+    return 1 if failed else 0
+
+
+def print_rows(title: str, rows: list) -> None:
+    if not rows:
+        return
+    print(f"\n# {title}")
+    cols = []
+    for r in rows:
+        cols.extend(k for k in r if k not in cols)
+    print("  ".join(c.rjust(max(len(c), 12)) for c in cols))
+    for r in rows:
+        cells = []
+        for c in cols:
+            v = r.get(c)
+            s = f"{v:.4g}" if isinstance(v, float) else ("" if v is None
+                                                         else str(v))
+            cells.append(s.rjust(max(len(c), 12)))
+        print("  ".join(cells))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    ap.add_argument("--out", default=None,
+                    help="BENCH_fleet.json path (default: repo root; "
+                         "omitted in --smoke unless given)")
+    ap.add_argument("--intervals", type=int, default=500)
+    ap.add_argument("--configs", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small-shape rows only; fast enough for CI")
+    ap.add_argument("--check-baseline", default=None, metavar="PATH",
+                    help="compare smoke speedups against this checked-in "
+                         "artifact; non-zero exit on regression")
+    ap.add_argument("--max-regress", type=float, default=0.2)
+    args = ap.parse_args()
+
+    if args.smoke:
+        # count retraces from the first dispatch (see lab_bench.py)
+        os.environ.setdefault("PLANECHECK_SANITIZERS", "1")
+    from repro.analysis.runtime import (excess_traces, reset_trace_counts,
+                                        sanitizers_enabled, trace_counts)
+
+    reset_trace_counts()
+    smoke_rows = bench_engines(**SMOKE_SHAPE)
+    print_rows("smoke shape ({n_tenants}x{n_nodes}x{n_intervals})"
+               .format(**SMOKE_SHAPE), smoke_rows)
+
+    if args.smoke:
+        if sanitizers_enabled():
+            counts = trace_counts("fleet.sweep.chunk")
+            excess = excess_traces("fleet.sweep.chunk")
+            print(f"\nrecompile counter: "
+                  f"{counts or '(no jitted sweeps ran)'}")
+            if excess:
+                print(f"FAIL: fleet sweep hot path retraced: {excess}")
+                return 1
+        else:
+            print("\nrecompile gate skipped (PLANECHECK_SANITIZERS "
+                  "explicitly disabled)")
+        if args.out:
+            with open(args.out, "w") as fh:
+                json.dump({"smoke_reference": smoke_rows}, fh, indent=2)
+            print(f"\nwrote {args.out}")
+        if args.check_baseline:
+            return check_baseline(smoke_rows, args.check_baseline,
+                                  args.max_regress)
+        return 0
+
+    rows = bench_engines(SMOKE_SHAPE["n_tenants"], SMOKE_SHAPE["n_nodes"],
+                         args.intervals, args.configs)
+    scaling_rows = bench_scaling(args.intervals, args.configs)
+    print_rows(f"engines (x{args.intervals} intervals)", rows)
+    print_rows("tenants x nodes scaling (fused path)", scaling_rows)
+
+    out = args.out or os.path.join(root, "BENCH_fleet.json")
+    with open(out, "w") as fh:
+        json.dump({"sweep_throughput": rows,
+                   "tenant_node_scaling": scaling_rows,
+                   "smoke_reference": smoke_rows}, fh, indent=2)
+    print(f"\nwrote {out}")
+    if args.check_baseline:
+        return check_baseline(smoke_rows, args.check_baseline,
+                              args.max_regress)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,15 +1,29 @@
-"""The paper's headline experiment (Sec. IV): mixed HPCC + Spark K-means
-on 5 compute nodes, four memory configurations, DynIMS vs static.
+"""The paper's Sec. IV mix driven through FleetPlane: an HPCC-style
+compute tenant and a Spark-style storage tenant arbitrated over one
+5-node / 125 GB fleet, per-tenant budgets re-granted every epoch.
 
     PYTHONPATH=src python examples/mixed_workload.py
 
-Prints the Fig. 5/7/8 numbers: speedups, hit ratios, and the burst
-shrink-and-recover timeline.
+Prints per-tenant budgets and fleet utilization per arbitration epoch
+(the two-level analogue of the Fig. 7 capacity timeline), then the
+classic four-configuration comparison (Figs. 5/7/8) from the cluster
+simulator for reference.
 """
 
 import numpy as np
 
 from repro.core.cluster_sim import run_paper_experiment
+from repro.core.control import ControllerParams
+from repro.core.monitor import SimulatedMonitor
+from repro.core.plane import NodeSpec, PlaneSpec
+from repro.core.traces import GiB, hpcc_trace
+from repro.fleet import FleetPlane, FleetSpec, TenantSpec
+
+N_NODES = 5
+M = 125.0 * GiB
+INTERVAL_S = 0.1
+EPOCH_INTERVALS = 20            # re-arbitrate every 2 s
+N_EPOCHS = 12
 
 NAMES = {
     1: "Spark(45GB), no cache      (static)",
@@ -19,8 +33,66 @@ NAMES = {
 }
 
 
-def main():
-    print("simulating 4 configurations x (HPCC + K-means 320 GiB)...")
+def build_fleet() -> FleetSpec:
+    """Sec. IV as two tenants: bursty HPCC compute + steady Spark."""
+    horizon = N_EPOCHS * EPOCH_INTERVALS
+    hpcc = hpcc_trace(horizon * INTERVAL_S, INTERVAL_S, seed=0)
+    hpcc = np.tile(hpcc, -(-horizon // len(hpcc)))[:horizon]
+    rng = np.random.default_rng(1)
+    spark = (30.0 + 2.0 * rng.standard_normal(horizon)).clip(20.0)
+
+    def nodes(tag, trace_gib):
+        return tuple(
+            NodeSpec(f"node{i}", monitor=SimulatedMonitor(
+                f"node{i}", total=M,
+                usage=lambda t, tr=trace_gib, i=i:
+                    float(tr[min(t, len(tr) - 1)]) * GiB
+                    * (0.9 + 0.05 * i)))
+            for i in range(N_NODES))
+
+    return FleetSpec(
+        tenants=(
+            TenantSpec("hpcc", PlaneSpec(
+                params=ControllerParams(total_memory=M, u_max=60 * GiB,
+                                        interval_s=INTERVAL_S),
+                nodes=nodes("hpcc", hpcc / GiB)),
+                weight=3.0, priority=1, floor_gib=10.0),
+            TenantSpec("spark", PlaneSpec(
+                params=ControllerParams(total_memory=M, u_max=60 * GiB,
+                                        interval_s=INTERVAL_S),
+                nodes=nodes("spark", spark)),
+                weight=1.0, priority=0, floor_gib=22.0),
+        ),
+        policy="proportional", epoch_intervals=EPOCH_INTERVALS,
+        fleet_memory_gib=M / GiB)
+
+
+def drive_fleet() -> None:
+    fleet = FleetPlane(build_fleet())
+    b0 = fleet.budgets()
+    print("FleetPlane: HPCC + Spark over "
+          f"{N_NODES} nodes x {M / GiB:.0f} GB, "
+          f"{fleet.spec.policy} policy, epoch = "
+          f"{EPOCH_INTERVALS * INTERVAL_S:.0f}s")
+    print(f"\n{'epoch':>5} {'hpcc':>9} {'spark':>9} {'sum':>9} "
+          f"{'fleet util':>11}")
+    print(f"{'init':>5} {b0['hpcc'] / GiB:8.1f}G {b0['spark'] / GiB:8.1f}G "
+          f"{sum(b0.values()) / GiB:8.1f}G {'':>11}")
+    for _ in range(N_EPOCHS):
+        for _ in range(EPOCH_INTERVALS):
+            fleet.tick()
+        b = fleet.budgets()
+        util = fleet.fleet_utilization()
+        print(f"{fleet.epoch:5d} {b['hpcc'] / GiB:8.1f}G "
+              f"{b['spark'] / GiB:8.1f}G {sum(b.values()) / GiB:8.1f}G "
+              f"{util:10.1%}")
+    total = sum(fleet.budgets().values())
+    print(f"\nbudget conservation held: sum = {total / GiB:.1f}G "
+          f"<= M = {M / GiB:.0f}G")
+
+
+def paper_comparison() -> None:
+    print("\nsimulating 4 configurations x (HPCC + K-means 320 GiB)...")
     res = run_paper_experiment()
     print(f"\n{'configuration':45s} {'runtime':>9} {'hit':>6} {'disk':>8}")
     for c in (1, 2, 3, 4):
@@ -29,11 +101,12 @@ def main():
               f"{r.hit_ratio:5.1%} {r.disk_reads_gib:6.0f}GiB")
     d = res
     print(f"\nDynIMS speedup vs config 1: "
-          f"{d[1].app_runtime_s/d[3].app_runtime_s:.1f}x  (paper: 5.1x)")
+          f"{d[1].app_runtime_s / d[3].app_runtime_s:.1f}x  (paper: 5.1x)")
     print(f"DynIMS speedup vs config 2: "
-          f"{d[2].app_runtime_s/d[3].app_runtime_s:.1f}x  (paper: 3.8x)")
+          f"{d[2].app_runtime_s / d[3].app_runtime_s:.1f}x  (paper: 3.8x)")
     print(f"DynIMS vs upper bound:      "
-          f"{d[3].app_runtime_s/d[4].app_runtime_s:.2f}x  (paper: comparable)")
+          f"{d[3].app_runtime_s / d[4].app_runtime_s:.2f}x  "
+          "(paper: comparable)")
 
     r = d[3]
     print("\nFig. 7 -- storage capacity timeline under the HPCC bursts:")
@@ -45,6 +118,11 @@ def main():
               f"exec={r.exec_gib[i]:5.1f}G |{bar}")
     print("\nFig. 8 -- K-means iteration times (DynIMS):",
           [f"{x:.0f}" for x in r.iteration_times_s])
+
+
+def main():
+    drive_fleet()
+    paper_comparison()
 
 
 if __name__ == "__main__":

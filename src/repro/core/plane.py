@@ -259,6 +259,10 @@ class NodeSpec:
     u0: Optional[float] = None
     params: Optional[ControllerParams] = None
 
+    def replace(self, **kw) -> "NodeSpec":
+        """A modified copy -- e.g. the same node under a wrapped monitor."""
+        return dataclasses.replace(self, **kw)
+
     def build_registry(self) -> StoreRegistry:
         if self.registry is not None:
             if self.stores:
@@ -314,6 +318,17 @@ class PlaneSpec:
             raise ValueError("record must be >= 0 (ring capacity)")
         object.__setattr__(self, "nodes", tuple(self.nodes))
         object.__setattr__(self, "signal", Signal.coerce(self.signal))
+
+    def replace(self, **kw) -> "PlaneSpec":
+        """A modified copy -- the composition hook for nestable planes.
+
+        ``repro.fleet`` derives each tenant's *inner* spec from the
+        declared one: budget-sized ``params`` (the tenant's grant plays
+        the role of ``total_memory``) and budget-reporting monitors
+        wrapped around the declared ones, with everything else -- nodes,
+        stores, signal, transport -- carried over unchanged.
+        """
+        return dataclasses.replace(self, **kw)
 
     def make_bus(self) -> MessageBus:
         if self.transport is None:

@@ -1,0 +1,44 @@
+"""FleetPlane: hierarchical multi-tenant memory arbitration.
+
+A two-level generalization of the paper's single-tenant controller
+(ROADMAP's top open item, modeled on migen's ASMI hub -- many masters
+arbitrated over one memory core):
+
+* :mod:`.specs`    -- nestable declarations: :class:`TenantSpec` wraps
+  a :class:`~repro.core.plane.PlaneSpec` with weight / priority /
+  floor; :class:`FleetSpec` composes N tenants over one physical fleet.
+* :mod:`.arbiter`  -- the epoch-driven global allocator: priority,
+  round-robin, and proportional-share (weighted max-min with floors)
+  policies; a float64 numpy reference (:func:`arbitrate_reference`)
+  parity-pinned against the batched jax path (:func:`arbitrate`).
+* :mod:`.plane`    -- the live :class:`FleetPlane`: one nested
+  :class:`~repro.core.plane.MemoryPlane` per tenant, budgets
+  hot-swapped through the epoch-stamped ``swap_params`` path (no torn
+  budgets).
+* :mod:`.sweep`    -- the fused (tenants x nodes) lab engine:
+  :func:`fleet_sweep_demand` rolls the composed system over a
+  :class:`~repro.lab.sweep.GainSet`, sharded over the lab's 1-D or 2-D
+  device mesh, with arbitration invariants streamed out as
+  :class:`FleetExtras`; :func:`fleet_reference` is the scalar oracle.
+* :mod:`.scenario` -- :class:`FleetScenario` composes per-tenant
+  :class:`~repro.lab.scenarios.ScenarioSpec` s (``hpcc-spark``,
+  ``tenant-churn``) for registry-driven sweeps.
+"""
+
+from .arbiter import (FleetArbiter, FleetGrant, MIN_TENANT_BUDGET,
+                      TenantTelemetry, arbitrate, arbitrate_reference)
+from .plane import FleetPlane, TenantMonitor
+from .scenario import (FleetScenario, FleetTenant, get_fleet_scenario,
+                       list_fleet_scenarios, register_fleet_scenario)
+from .specs import FleetSpec, POLICIES, TenantSpec
+from .sweep import (FLEET_CHUNK, FleetExtras, fleet_reference,
+                    fleet_sweep_demand, run_fleet_sweep)
+
+__all__ = [
+    "FLEET_CHUNK", "FleetArbiter", "FleetExtras", "FleetGrant",
+    "FleetPlane", "FleetScenario", "FleetSpec", "FleetTenant",
+    "MIN_TENANT_BUDGET", "POLICIES", "TenantMonitor", "TenantSpec",
+    "TenantTelemetry", "arbitrate", "arbitrate_reference",
+    "fleet_reference", "fleet_sweep_demand", "get_fleet_scenario",
+    "list_fleet_scenarios", "register_fleet_scenario", "run_fleet_sweep",
+]

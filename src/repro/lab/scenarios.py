@@ -591,3 +591,28 @@ register_scenario(ScenarioSpec(
                     evict_penalty_s_per_gib=0.1),
     description="bursts force evict/refill cycles through a slow-refill "
                 "LRU cache: reclaim aggression now costs reloads"))
+
+# Runtime-churn scenario: the demand is synthesized by actually
+# *running* the runtime's fault machinery -- StragglerDetector's
+# squeeze->evict escalation and HeartbeatMonitor's timeout detection --
+# over a simulated fleet (see repro.runtime.churn), then frozen as a
+# replay payload so sweeps stay deterministic and cheap.  This is the
+# registration that finally routes runtime/straggler.py and
+# runtime/fault.py into the lab; the multi-tenant composition lives in
+# repro.fleet.scenario ("tenant-churn").
+
+
+def _register_runtime_churn() -> ScenarioSpec:
+    from ..runtime.churn import churn_demand
+    demand, _events = churn_demand(n_nodes=24, n_intervals=480,
+                                   interval_s=0.1, seed=0)
+    return register_scenario(ScenarioSpec(
+        name="runtime-churn", family="replay", n_nodes=24, n_intervals=480,
+        replay=ReplayTrace(demand, np.full(24, 125.0 * GiB),
+                           interval_s=0.1),
+        description="fault-injected fleet: straggler squeeze/evict demand "
+                    "swings plus heartbeat-timeout failure windows, "
+                    "generated by the live runtime detectors"))
+
+
+_register_runtime_churn()

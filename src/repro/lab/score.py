@@ -200,7 +200,8 @@ QUANT_LEVELS = 12
 
 
 def quantile_from_codes(codes: Array, q: float, n_total: int,
-                        levels: int = QUANT_LEVELS) -> Array:
+                        levels: int = QUANT_LEVELS,
+                        axis_name: Optional[str] = None) -> Array:
     """Quantile of the implicit fixed-bin histogram behind ``codes``.
 
     ``codes`` is any-shape ``uint16`` (one code per closed-loop sample,
@@ -212,6 +213,12 @@ def quantile_from_codes(codes: Array, q: float, n_total: int,
     statistic at ``floor(q * (n_total - 1))`` (``np.quantile``'s lower
     neighbour): error <= ``QUANT_RANGE`` span * 2^-(levels+1), plus
     half a bin once ``levels`` hits 16.
+
+    Under ``shard_map`` with the node axis sharded, pass ``axis_name``
+    (and the *global* ``n_total``): each bisection level's count is
+    ``psum``'d across the axis, so every shard walks the identical
+    bracket sequence over the global histogram -- integer counts make
+    the collective exact, and the result is replicated by construction.
     """
     target = jnp.int32(int(np.floor(q * (n_total - 1))))
 
@@ -224,6 +231,8 @@ def quantile_from_codes(codes: Array, q: float, n_total: int,
         mid = (lo + hi) >> 1
         below = codes <= mid.astype(jnp.uint16)
         count = below.sum(axis=-1, dtype=part_dtype).astype(jnp.int32).sum()
+        if axis_name is not None:
+            count = jax.lax.psum(count, axis_name)
         go_left = count > target
         return (jnp.where(go_left, lo, mid + 1),
                 jnp.where(go_left, mid, hi))
@@ -233,6 +242,23 @@ def quantile_from_codes(codes: Array, q: float, n_total: int,
     lo0, _hi0 = QUANT_RANGE
     mid_code = (lo.astype(jnp.float32) + hi.astype(jnp.float32) + 1.0) * 0.5
     return lo0 + mid_code / _QUANT_SCALE
+
+
+def _axis_sum(x: Array, axis_name: Optional[str]) -> Array:
+    """Fold per-node lanes, then (under shard_map) across the axis.
+
+    ``axis_name=None`` is the exact historical expression, so unsharded
+    callers stay bitwise identical.
+    """
+    if axis_name is None:
+        return x.sum()
+    return jax.lax.psum(x.sum(), axis_name)
+
+
+def _axis_max(x: Array, axis_name: Optional[str]) -> Array:
+    if axis_name is None:
+        return x.max()
+    return jax.lax.pmax(x.max(), axis_name)
 
 
 def finalize_fleet_stats(
@@ -252,6 +278,8 @@ def finalize_fleet_stats(
     evicted_gib: Optional[Array] = None,     # (N,) sum of evicted bytes / GiB
     app_time_s: Optional[Array] = None,      # (N,) modeled per-node app time
     accesses_gib: Optional[Array] = None,    # scalar per-node access total
+    axis_name: Optional[str] = None,         # shard_map node axis, if sharded
+    n_nodes: Optional[int] = None,           # global N when lanes are a shard
 ) -> FleetStats:
     """Assemble :class:`FleetStats` from streamed per-node accumulators.
 
@@ -264,35 +292,43 @@ def finalize_fleet_stats(
     ``app_runtime`` is the slowest node's modeled time -- iterative
     apps synchronize on a barrier, so the straggler sets the fleet's
     runtime (``cluster_sim``'s iteration semantics).
+
+    When the node axis is sharded under ``shard_map`` (the 2-D
+    gains x nodes mesh), the accumulators here are one shard's lanes:
+    pass ``axis_name`` so the final folds become ``psum``/``pmax``
+    collectives, and ``n_nodes`` as the *global* fleet size.  Every
+    returned field is then replicated across the node axis.
     """
     t = n_intervals
-    n = util_sum.shape[-1]
+    n = util_sum.shape[-1] if n_nodes is None else n_nodes
     samples = t * n
-    caps_total = caps_sum_gib.sum()
+    caps_total = _axis_sum(caps_sum_gib, axis_name)
     caps_mean = caps_total / samples
-    caps_var = jnp.maximum(caps_sumsq_gib.sum() / samples
+    caps_var = jnp.maximum(_axis_sum(caps_sumsq_gib, axis_name) / samples
                            - caps_mean * caps_mean, 0.0)
-    max_util = util_max.max()
+    max_util = _axis_max(util_max, axis_name)
     ideal_s = t * interval_s
     if app_time_s is None:
         hit_ratio = jnp.float32(1.0)
         evicted_bytes = jnp.float32(0.0)
         app_runtime = jnp.asarray(ideal_s, jnp.float32)
     else:
-        hit_ratio = hits_gib.sum() / (n * accesses_gib)
-        evicted_bytes = evicted_gib.sum() * jnp.float32(GiB)
-        app_runtime = app_time_s.max()
+        hit_ratio = _axis_sum(hits_gib, axis_name) / (n * accesses_gib)
+        evicted_bytes = _axis_sum(evicted_gib, axis_name) * jnp.float32(GiB)
+        app_runtime = _axis_max(app_time_s, axis_name)
     return FleetStats(
-        mean_utilization=util_sum.sum() / samples,
+        mean_utilization=_axis_sum(util_sum, axis_name) / samples,
         p99_utilization=p99_utilization,
         max_utilization=max_util,
-        frac_intervals_over_r0=over_r0_count.sum() / samples,
+        frac_intervals_over_r0=_axis_sum(over_r0_count, axis_name) / samples,
         max_over_r0=jnp.clip(max_util - r0, 0.0, None),
-        pressure_violation_rate=violation_count.sum() / samples,
+        pressure_violation_rate=_axis_sum(violation_count,
+                                          axis_name) / samples,
         mean_capacity_gib=caps_mean,
         capacity_std_gib=jnp.sqrt(caps_var),
         granted_volume_gib_s=caps_total / n * interval_s,
-        settle_intervals=(last_bad.max() + 1).astype(jnp.int32),
+        settle_intervals=(_axis_max(last_bad, axis_name) + 1)
+        .astype(jnp.int32),
         hit_ratio=hit_ratio,
         evicted_bytes=evicted_bytes,
         app_runtime=app_runtime,

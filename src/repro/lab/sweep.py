@@ -171,7 +171,9 @@ def _one_gain_stream(demand_tn, m, inv_m, r0_g, lam_g, lam_grant_g, u_min_g,
                      u_max_g, db_g, ff_g, interval_s, occupancy, *,
                      paper_law: bool, unit_occupancy: bool,
                      static_bounds: Optional[Tuple[float, float]],
-                     cache: Optional[CacheSpec]):
+                     cache: Optional[CacheSpec],
+                     axis_name: Optional[str] = None,
+                     node_shards: int = 1):
     """Closed loop for one gain point, fully streamed.
 
     The scan carry holds only per-node accumulators (O(N) state); the
@@ -188,6 +190,13 @@ def _one_gain_stream(demand_tn, m, inv_m, r0_g, lam_g, lam_grant_g, u_min_g,
     clamps against compile-time constants instead of broadcast traced
     scalars.  All paths produce identical results for parameters the
     faster path admits.
+
+    With the node axis sharded across devices (``axis_name`` set, the
+    2-D gains x nodes mesh) the per-node lanes here are one shard's
+    slice: the closed loop itself is embarrassingly node-parallel, so
+    only the final stat folds and the streaming-quantile counts need
+    collectives -- both take ``axis_name`` and reduce over the *global*
+    fleet (``n_nodes * node_shards`` samples per interval).
 
     ``cache`` (CacheLoop) swaps the saturated store for per-node cache
     dynamics carried through the scan: the controller observes the
@@ -336,7 +345,9 @@ def _one_gain_stream(demand_tn, m, inv_m, r0_g, lam_g, lam_grant_g, u_min_g,
                                 unroll=2)
     _, cst, acc = carry
     (us, _, cs, _, c2, mx, n_r0, n_viol, last_bad, _) = acc
-    p99 = quantile_from_codes(codes, 0.99, n_steps * n_nodes)
+    n_global = n_nodes * node_shards
+    p99 = quantile_from_codes(codes, 0.99, n_steps * n_global,
+                              axis_name=axis_name)
     cache_kw = {}
     if cache is not None:
         cache_kw = dict(hits_gib=cst[1], evicted_gib=cst[3],
@@ -346,14 +357,16 @@ def _one_gain_stream(demand_tn, m, inv_m, r0_g, lam_g, lam_grant_g, u_min_g,
         util_sum=us, util_max=mx, caps_sum_gib=cs, caps_sumsq_gib=c2,
         over_r0_count=n_r0, violation_count=n_viol, last_bad=last_bad,
         p99_utilization=p99, r0=r0_g, n_intervals=n_steps,
-        interval_s=interval_s, **cache_kw)
+        interval_s=interval_s, axis_name=axis_name, n_nodes=n_global,
+        **cache_kw)
 
 
 def _chunk_stats(demand_tn, m, r0, lam, lam_grant, u_min, u_max, deadband,
                  feedforward, interval_s, occupancy, *, paper_law: bool,
                  unit_occupancy: bool,
                  static_bounds: Optional[Tuple[float, float]],
-                 cache: Optional[CacheSpec], spec: str = ""):
+                 cache: Optional[CacheSpec], spec: str = "",
+                 axis_name: Optional[str] = None, node_shards: int = 1):
     """One gain chunk: scan over T, vmap over gains -> (G,)-field stats.
 
     ``demand_tn`` is ``(T, N)`` bytes (shared by every gain point),
@@ -363,13 +376,15 @@ def _chunk_stats(demand_tn, m, r0, lam, lam_grant, u_min, u_max, deadband,
     executable.  ``spec`` is :func:`_spec_digest` of the enclosing
     :func:`_compiled_sweep` cache key, so the recompile-counter key
     below distinguishes every legitimately separate executable.
+    Under the 2-D mesh ``demand_tn``/``m`` are one node shard and
+    ``axis_name``/``node_shards`` make the stat folds collective.
     """
     # Trace-time only (Python in a jitted body runs once per compile):
     # the recompile counter the sanitizer fixtures and --smoke assert
     # on.  The key must be one-to-one with the executable cache key --
     # shapes from the operands, everything else (devices, plan, full
-    # CacheSpec) folded into the spec digest -- or distinct CacheSpecs
-    # at the same shape would false-positive the gate.
+    # CacheSpec, mesh shape) folded into the spec digest -- or distinct
+    # CacheSpecs at the same shape would false-positive the gate.
     record_trace("lab.sweep.chunk", chunk=int(r0.shape[0]),
                  horizon=int(demand_tn.shape[0]),
                  nodes=int(demand_tn.shape[1]),
@@ -383,7 +398,9 @@ def _chunk_stats(demand_tn, m, r0, lam, lam_grant, u_min, u_max, deadband,
                                 lam_grant_g, u_min_g, u_max_g, db_g, ff_g,
                                 interval_s, occupancy, paper_law=paper_law,
                                 unit_occupancy=unit_occupancy,
-                                static_bounds=static_bounds, cache=cache)
+                                static_bounds=static_bounds, cache=cache,
+                                axis_name=axis_name,
+                                node_shards=node_shards)
 
     return jax.vmap(one_gain)(
         jnp.asarray(r0, jnp.float32), jnp.asarray(lam, jnp.float32),
@@ -395,45 +412,67 @@ def _chunk_stats(demand_tn, m, r0, lam, lam_grant, u_min, u_max, deadband,
 
 def _spec_digest(devices: Tuple, paper_law: bool, unit_occupancy: bool,
                  static_bounds: Optional[Tuple[float, float]],
-                 cache: Optional[CacheSpec]) -> str:
+                 cache: Optional[CacheSpec], node_shards: int = 1) -> str:
     """Short stable digest of one :func:`_compiled_sweep` cache key.
 
     Folded into the ``lab.sweep.chunk`` recompile-counter dims so the
     counter key is one-to-one with the executables that legitimately
-    exist: two :class:`CacheSpec`\\ s (or device tuples, or bound
-    specializations) at the same shape compile separately and must
-    count separately.  ``repr`` of a frozen dataclass / device string
-    is deterministic, so the digest is stable across processes too.
+    exist: two :class:`CacheSpec`\\ s (or device tuples, mesh shapes,
+    or bound specializations) at the same shape compile separately and
+    must count separately.  ``repr`` of a frozen dataclass / device
+    string is deterministic, so the digest is stable across processes
+    too.
     """
     key = repr((tuple(str(d) for d in devices), paper_law,
-                unit_occupancy, static_bounds, cache))
+                unit_occupancy, static_bounds, cache, node_shards))
     return hashlib.sha1(key.encode()).hexdigest()[:12]
 
 
 @functools.lru_cache(maxsize=None)
 def _compiled_sweep(devices: Tuple, paper_law: bool, unit_occupancy: bool,
                     static_bounds: Optional[Tuple[float, float]],
-                    cache: Optional[CacheSpec]):
+                    cache: Optional[CacheSpec], node_shards: int = 1):
     """Jitted chunk program for a device tuple (sharded when > 1).
 
-    The gain axis is split over a 1-D ``("gains",)`` mesh with
-    ``shard_map``; demand and node memory replicate.  Per-gain programs
-    are identical to the single-device path, so sharding changes only
-    placement, not results.
+    With ``node_shards == 1`` the gain axis is split over a 1-D
+    ``("gains",)`` mesh with ``shard_map``; demand and node memory
+    replicate and per-gain programs are identical to the single-device
+    path, so sharding changes only placement, not results.
+
+    With ``node_shards > 1`` the devices form a 2-D
+    ``("gains", "nodes")`` mesh: the gain axis splits as before and the
+    node axis of demand / node memory splits ``node_shards`` ways, so
+    fleets too large for one device's code-history budget shard too.
+    Per-gain closed loops stay node-local; only the final stat folds
+    run ``psum``/``pmax`` collectives over ``"nodes"`` (every output is
+    therefore replicated along that axis).  Collective summation
+    reassociates float adds, so node-sharded stats match the unsharded
+    ones to reduction tolerance, not bitwise -- the single-device
+    fallback below stays the bit-exact reference.
     """
+    spec = _spec_digest(devices, paper_law, unit_occupancy, static_bounds,
+                        cache, node_shards)
     fn = functools.partial(_chunk_stats, paper_law=paper_law,
                            unit_occupancy=unit_occupancy,
                            static_bounds=static_bounds, cache=cache,
-                           spec=_spec_digest(devices, paper_law,
-                                             unit_occupancy, static_bounds,
-                                             cache))
+                           spec=spec,
+                           axis_name="nodes" if node_shards > 1 else None,
+                           node_shards=node_shards)
     if len(devices) <= 1:
         return jax.jit(fn)
-    mesh = Mesh(np.asarray(devices), ("gains",))
     gains_specs = (P("gains"),) * 7
+    if node_shards == 1:
+        mesh = Mesh(np.asarray(devices), ("gains",))
+        in_specs = (P(None, None), P(None)) + gains_specs + (P(), P())
+    else:
+        grid = np.asarray(devices).reshape(
+            len(devices) // node_shards, node_shards)
+        mesh = Mesh(grid, ("gains", "nodes"))
+        in_specs = ((P(None, "nodes"), P("nodes")) + gains_specs
+                    + (P(), P()))
     mapped = _shard_map(
         fn, mesh=mesh,
-        in_specs=(P(None, None), P(None)) + gains_specs + (P(), P()),
+        in_specs=in_specs,
         out_specs=P("gains"),
         check_rep=False)
     return jax.jit(mapped)
@@ -526,6 +565,7 @@ def sweep_demand(
     chunk: Optional[int] = None,
     devices: Union[None, int, Sequence] = None,
     cache: Optional[CacheSpec] = None,
+    node_shards: int = 1,
 ) -> FleetStats:
     """Sweep a raw ``(N, T)`` demand matrix over every gain point.
 
@@ -536,8 +576,13 @@ def sweep_demand(
     Every chunk is dispatched before any result is collected, so on an
     asynchronous backend chunk k+1 computes while chunk k's (G,)-scalar
     stats drain.  ``devices`` shards the gain axis (see module docs);
-    chunking and sharding are implementation details -- stats are
-    independent of both.  ``cache`` enables CacheLoop (see
+    ``node_shards > 1`` additionally splits the node axis, forming a
+    2-D ``(gains x nodes)`` mesh -- ``len(devices)`` must be divisible
+    by ``node_shards`` and ``N`` by the shard count.  Chunking and
+    sharding are implementation details -- stats are independent of
+    both (node-sharded float sums to reduction tolerance; with one
+    device the plain-jit path is taken and results are bit-identical
+    regardless of ``node_shards``).  ``cache`` enables CacheLoop (see
     :class:`~repro.lab.scenarios.CacheSpec`); a gain set mixing
     paper-faithful and beyond-paper points is partitioned by law class
     so each class runs its own specialized executable.
@@ -546,6 +591,8 @@ def sweep_demand(
     if cache is not None and float(occupancy) != 1.0:
         raise ValueError("cache modeling replaces the occupancy "
                          "abstraction; need occupancy == 1.0")
+    if node_shards < 1:
+        raise ValueError("node_shards must be >= 1")
     mask = paper_law_mask(gains)
     if mask.any() and not mask.all():
         # Mixed law classes: dispatch each class at its own
@@ -554,7 +601,7 @@ def sweep_demand(
         # path.
         sub_kw = dict(node_memory=node_memory, interval_s=interval_s,
                       occupancy=occupancy, chunk=chunk, devices=devices,
-                      cache=cache)
+                      cache=cache, node_shards=node_shards)
         idx_fast = np.flatnonzero(mask)
         idx_slow = np.flatnonzero(~mask)
         fast = sweep_demand(demand, gains.take(idx_fast), **sub_kw)
@@ -572,7 +619,19 @@ def sweep_demand(
     m = np.broadcast_to(np.asarray(node_memory, np.float64),
                         (n_nodes,)).astype(np.float32)
     devs = resolve_devices(devices)
-    chunk = _resolve_chunk(chunk, len(gains), n_steps, n_nodes, len(devs))
+    if len(devs) <= 1:
+        # The bit-exact fallback: one device always runs the plain
+        # jitted program, whatever node_shards was requested.
+        node_shards = 1
+    else:
+        if len(devs) % node_shards:
+            raise ValueError(f"devices ({len(devs)}) must divide evenly "
+                             f"into node_shards={node_shards}")
+        if n_nodes % node_shards:
+            raise ValueError(f"n_nodes ({n_nodes}) must be divisible by "
+                             f"node_shards={node_shards}")
+    gain_shards = len(devs) // node_shards
+    chunk = _resolve_chunk(chunk, len(gains), n_steps, n_nodes, gain_shards)
     # Pad the ragged tail up to the chunk width (repeating the last gain)
     # so every call hits the same shape-specialized executable; the
     # padded rows' stats are sliced off below.
@@ -584,7 +643,7 @@ def sweep_demand(
         gains = gains.concat(pad)
     plan = plan_specialization(gains, occupancy)
     fn = _compiled_sweep(devs, plan.paper_law, plan.unit_occupancy,
-                         plan.static_bounds, cache)
+                         plan.static_bounds, cache, node_shards)
     # Stage every operand device-side (f32) exactly once.  The gain
     # columns used to go up as numpy float64 slices -- a silent
     # H2D transfer + cast per chunk per array -- so chunks are now
@@ -659,6 +718,7 @@ def run_sweep(
     node_memory: Optional[Union[float, np.ndarray]] = None,
     devices: Union[None, int, Sequence] = None,
     horizon: Optional[int] = None,
+    node_shards: int = 1,
 ) -> SweepResult:
     """Compile ``scenario`` and run its closed loop over every gain.
 
@@ -667,6 +727,8 @@ def run_sweep(
     ``horizon`` truncates the closed loop to the scenario's first
     ``horizon`` intervals -- the successive-halving tuner scores cheap
     prefix rounds with it while reusing the same demand compilation.
+    ``node_shards`` splits the node axis across devices (2-D mesh; see
+    :func:`sweep_demand`).
     """
     spec = get_scenario(scenario)
     demand = spec.build_demand(seed=seed)
@@ -681,7 +743,7 @@ def run_sweep(
     stats = sweep_demand(
         demand, gains, node_memory=m, interval_s=spec.interval_s,
         occupancy=spec.occupancy, chunk=chunk, devices=devices,
-        cache=spec.cache)
+        cache=spec.cache, node_shards=node_shards)
     elapsed = time.perf_counter() - t0
     return SweepResult(scenario=spec, gains=gains, stats=stats, seed=seed,
                        elapsed_s=elapsed)

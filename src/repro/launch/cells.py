@@ -168,3 +168,40 @@ def build_cell(arch: str, shape_name: str, mesh,
 def _mesh_dm(mesh) -> Tuple[int, int]:
     names = dict(zip(mesh.axis_names, mesh.devices.shape))
     return names.get("data", 1), names.get("model", 1)
+
+
+# ---------------------------------------------------------------------------
+# Per-cell FleetPlane deployment
+# ---------------------------------------------------------------------------
+
+# Serving cells are latency-critical (decode above prefill); training
+# tolerates throughput dips, so it arbitrates at the bottom.
+DEFAULT_CELL_PRIORITY: Dict[str, int] = {"decode": 2, "prefill": 1,
+                                         "train": 0}
+
+
+def cell_tenant(arch: str, shape_name: str, *, plane,
+                weight: Optional[float] = None,
+                priority: Optional[int] = None,
+                floor_gib: float = 0.0):
+    """Wrap one benchmark cell's memory plane as a fleet tenant.
+
+    The nestable-spec refactor's deployment hook: a cell (arch x shape)
+    that already declares a host-memory ``PlaneSpec`` for its dataset /
+    KV caches becomes a :class:`~repro.fleet.specs.TenantSpec` that a
+    :class:`~repro.fleet.specs.FleetSpec` can arbitrate beside other
+    cells sharing the host.  Defaults derive from the cell itself:
+    ``weight`` scales with active parameters (bigger models keep more
+    working state per node), ``priority`` from the cell kind
+    (:data:`DEFAULT_CELL_PRIORITY` -- serving above training).
+    """
+    from ..fleet.specs import TenantSpec
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if weight is None:
+        weight = max(cfg.n_active_params() / 1e9, 0.25)
+    if priority is None:
+        priority = DEFAULT_CELL_PRIORITY.get(shape.kind, 0)
+    return TenantSpec(name=f"{arch}:{shape_name}", plane=plane,
+                      weight=float(weight), priority=int(priority),
+                      floor_gib=float(floor_gib))

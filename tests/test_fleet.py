@@ -1,0 +1,539 @@
+"""FleetPlane: arbiter invariants, nested-plane composition, fused
+sweep parity, and torn-budget audits.
+
+The arbiter invariants (conservation, floor respect, starvation
+freedom) are checked three ways: directly on the float64 reference,
+on the batched jax path against that reference, and end-to-end on the
+fused sweep's streamed :class:`FleetExtras`.
+"""
+
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.cluster_sim import paper_controller_params
+from repro.core.control import ControllerParams
+from repro.core.monitor import SimulatedMonitor
+from repro.core.plane import NodeSpec, PlaneSpec
+from repro.core.traces import GiB
+from repro.fleet import (FleetArbiter, FleetExtras, FleetPlane,
+                         FleetScenario, FleetSpec, FleetTenant,
+                         MIN_TENANT_BUDGET, POLICIES, TenantMonitor,
+                         TenantSpec, TenantTelemetry, arbitrate,
+                         arbitrate_reference, fleet_reference,
+                         fleet_sweep_demand, get_fleet_scenario,
+                         list_fleet_scenarios, run_fleet_sweep)
+from repro.lab import FleetStats, get_scenario, grid_gains
+from repro.lab.scenarios import ScenarioSpec
+from repro.runtime.churn import FAILED_DEMAND, churn_demand
+
+M = 125.0 * GiB
+
+
+def _params(**kw):
+    kw.setdefault("total_memory", M)
+    kw.setdefault("u_max", 60.0 * GiB)
+    kw.setdefault("interval_s", 0.01)
+    return ControllerParams(**kw)
+
+
+def _tenant_spec(name, usage_gib, n_nodes=2, **kw):
+    nodes = tuple(
+        NodeSpec(f"{name}-n{i}", monitor=SimulatedMonitor(
+            f"{name}-n{i}", total=M, usage=lambda t, g=usage_gib: g * GiB))
+        for i in range(n_nodes))
+    return TenantSpec(name, PlaneSpec(params=_params(), nodes=nodes), **kw)
+
+
+def _three_tenants(**fleet_kw):
+    return FleetSpec(
+        tenants=(
+            _tenant_spec("heavy", 45.0, weight=3.0, priority=2,
+                         floor_gib=10.0),
+            _tenant_spec("steady", 25.0, weight=1.5, priority=1,
+                         floor_gib=8.0),
+            _tenant_spec("light", 8.0, weight=1.0, priority=0),
+        ),
+        **fleet_kw)
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+def test_spec_validation():
+    plane = _tenant_spec("a", 10.0).plane
+    with pytest.raises(ValueError):
+        TenantSpec("", plane)
+    with pytest.raises(ValueError):
+        TenantSpec("a", plane, weight=0.0)
+    with pytest.raises(ValueError):
+        TenantSpec("a", plane, floor_gib=-1.0)
+    with pytest.raises(ValueError):
+        FleetSpec(tenants=())
+    with pytest.raises(ValueError):                      # duplicate names
+        FleetSpec(tenants=(TenantSpec("a", plane), TenantSpec("a", plane)))
+    with pytest.raises(ValueError):
+        FleetSpec(tenants=(TenantSpec("a", plane),), policy="lottery")
+    with pytest.raises(ValueError):                      # floors > memory
+        FleetSpec(tenants=(TenantSpec("a", plane, floor_gib=100.0),
+                           TenantSpec("b", plane, floor_gib=50.0)),
+                  fleet_memory_gib=125.0)
+    spec = _three_tenants()
+    assert spec.names == ("heavy", "steady", "light")
+    assert spec.priority_order() == (0, 1, 2)
+    assert len(spec) == 3
+    # priority ties break in declaration order
+    flat = spec.replace(tenants=tuple(
+        t.replace(priority=0) for t in spec.tenants))
+    assert flat.priority_order() == (0, 1, 2)
+
+
+def test_nested_plane_rejects_per_node_params():
+    base = _tenant_spec("a", 10.0)
+    pinned = base.plane.nodes[0].replace(
+        params=_params(total_memory=64 * GiB))
+    bad = base.replace(plane=base.plane.replace(
+        nodes=(pinned,) + base.plane.nodes[1:]))
+    with pytest.raises(ValueError, match="per-node params"):
+        FleetPlane(FleetSpec(tenants=(bad,)))
+
+
+# ---------------------------------------------------------------------------
+# Arbiter policies: invariants + scalar/batched parity
+# ---------------------------------------------------------------------------
+
+def _random_problem(rng, k=4, n=6):
+    desired = rng.uniform(0.0, 80.0, (k, n)) * GiB
+    m = rng.uniform(64.0, 160.0, n) * GiB
+    weights = rng.uniform(0.5, 4.0, k)
+    floors = rng.uniform(0.0, 12.0, k) * GiB
+    return desired, m, weights, floors
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_arbitrate_reference_invariants(policy):
+    """Conservation, floor respect, demand boundedness -- every node,
+    every policy, jittered node memories."""
+    rng = np.random.default_rng(7)
+    for trial in range(20):
+        desired, m, weights, floors = _random_problem(rng)
+        k = desired.shape[0]
+        alloc = arbitrate_reference(
+            desired, m, weights=weights, floors=floors,
+            priority_order=tuple(range(k)), policy=policy,
+            rr_offset=trial % k)
+        assert (alloc >= 0).all()
+        # conservation: sum over tenants never exceeds the node
+        assert (alloc.sum(0) <= m * (1 + 1e-9)).all(), trial
+        # floor respect: every tenant holds its (admissible) floor
+        f = np.maximum(floors[:, None], MIN_TENANT_BUDGET)
+        f_eff = f * np.minimum(1.0, m / np.maximum(f.sum(0), 1.0))
+        assert (alloc >= f_eff * (1 - 1e-9)).all(), trial
+        # demand boundedness: nobody gets more than it asked (or floor)
+        assert (alloc <= np.maximum(desired, f_eff) + 1.0).all(), trial
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_arbitrate_matches_reference(policy):
+    """Batched (tenants x nodes) jax path pinned to the float64 oracle."""
+    rng = np.random.default_rng(3)
+    for trial in range(5):
+        desired, m, weights, floors = _random_problem(rng, k=5, n=4)
+        k = desired.shape[0]
+        order = tuple(rng.permutation(k))
+        kw = dict(weights=weights, floors=floors, priority_order=order,
+                  policy=policy, rr_offset=trial)
+        ref = arbitrate_reference(desired, m, **kw)
+        got = np.asarray(arbitrate(desired.astype(np.float32),
+                                   m.astype(np.float32), **kw))
+        np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1024.0)
+
+
+def test_priority_starves_only_without_floor():
+    """Strict priority drains the pool top-down: a floorless last-place
+    tenant is starved under scarcity, a floor protects it."""
+    desired = np.full((3, 1), 80.0) * GiB
+    m = np.array([100.0 * GiB])
+    kw = dict(weights=np.ones(3), priority_order=(0, 1, 2),
+              policy="priority")
+    starved = arbitrate_reference(desired, m, floors=np.zeros(3), **kw)
+    assert starved[0, 0] == pytest.approx(80.0 * GiB)
+    assert starved[2, 0] <= MIN_TENANT_BUDGET  # floorless: starved
+    floored = arbitrate_reference(desired, m,
+                                  floors=np.array([0, 0, 15.0 * GiB]), **kw)
+    assert floored[2, 0] >= 15.0 * GiB * (1 - 1e-9)
+
+
+def test_round_robin_rotation_is_starvation_free():
+    """Over K consecutive epochs every tenant heads the chain once, so
+    each gets the full pool at least once even with zero floors."""
+    k = 3
+    desired = np.full((k, 1), 90.0) * GiB
+    m = np.array([100.0 * GiB])
+    best = np.zeros(k)
+    for off in range(k):
+        alloc = arbitrate_reference(
+            desired, m, weights=np.ones(k), floors=np.zeros(k),
+            priority_order=tuple(range(k)), policy="round_robin",
+            rr_offset=off)
+        best = np.maximum(best, alloc[:, 0])
+    assert (best >= 90.0 * GiB * (1 - 1e-9)).all()
+
+
+def test_proportional_waterfill_redistributes():
+    """A satisfied tenant's leftover share re-divides among the hungry
+    (max-min), and grants follow weights when everyone is hungry."""
+    m = np.array([100.0 * GiB])
+    alloc = arbitrate_reference(
+        np.array([[10.0], [200.0], [200.0]]) * GiB, m,
+        weights=np.array([2.0, 1.0, 1.0]), floors=np.zeros(3),
+        priority_order=(0, 1, 2), policy="proportional")
+    assert alloc[0, 0] == pytest.approx(10.0 * GiB)       # capped at desire
+    assert alloc[1, 0] == pytest.approx(45.0 * GiB, rel=1e-6)
+    assert alloc[2, 0] == pytest.approx(45.0 * GiB, rel=1e-6)
+    hungry = arbitrate_reference(
+        np.full((2, 1), 500.0) * GiB, m,
+        weights=np.array([3.0, 1.0]), floors=np.zeros(2),
+        priority_order=(0, 1), policy="proportional")
+    # rel 1e-4: both tenants hold the 1 MiB minimum before weighting
+    assert hungry[0, 0] / hungry[1, 0] == pytest.approx(3.0, rel=1e-4)
+
+
+def test_fleet_arbiter_runtime():
+    spec = _three_tenants(policy="round_robin")
+    arb = FleetArbiter(spec)
+    b0 = arb.initial_budgets(M)
+    assert sum(b0.values()) == pytest.approx(M, rel=1e-9)
+    assert b0["heavy"] > b0["light"]                      # weight share
+    tele = {n: TenantTelemetry(usage_bytes=20.0 * GiB, budget_bytes=b)
+            for n, b in b0.items()}
+    g1 = arb.allocate(tele, M)
+    g2 = arb.allocate(tele, M)
+    assert (g1.epoch, g2.epoch) == (1, 2)
+    assert arb.last_grant() is g2
+    assert g2.total() <= M * (1 + 1e-9)
+    # missing telemetry bids the floor, not garbage
+    g3 = arb.allocate({}, M)
+    assert g3.budgets["light"] <= MIN_TENANT_BUDGET * (1 + 1e-9)
+    # telemetry derived quantities
+    t = TenantTelemetry(usage_bytes=30.0, budget_bytes=40.0, hit_ratio=0.5)
+    assert t.pressure == pytest.approx(0.75)
+    assert t.slack_bytes == pytest.approx(10.0)
+    assert t.desired_bytes(r0=1.0) == pytest.approx(45.0)  # miss headroom
+
+
+# ---------------------------------------------------------------------------
+# Live FleetPlane
+# ---------------------------------------------------------------------------
+
+def test_fleet_plane_end_to_end():
+    """3 tenants x 5 epochs: budgets track demand, conservation holds
+    at every epoch, nested actions are epoch-stamped."""
+    spec = _three_tenants(epoch_intervals=4)
+    with FleetPlane(spec) as fp:
+        seen = []
+        for _ in range(20):
+            actions = fp.tick()
+            assert set(actions) == {"heavy", "steady", "light"}
+            b = fp.budgets()
+            assert sum(b.values()) <= M * (1 + 1e-9)
+            seen.append(b)
+        assert fp.epoch == 5
+        final = fp.budgets()
+        # budgets track demand: heavy (45G usage) outranks light (8G)
+        assert final["heavy"] > final["steady"] > final["light"]
+        # nested monitors observe the grant, not the node
+        mon = fp.plane("light").spec.nodes[0].monitor
+        assert isinstance(mon, TenantMonitor)
+        assert mon.sample().total == pytest.approx(final["light"])
+        # every rebalance rode the epoch-stamped swap machinery
+        acts = fp.plane("heavy").tick()
+        assert acts and acts[0].epoch == 5
+        assert fp.last_grant().epoch == 5
+        assert 0.0 < fp.fleet_utilization() < 1.0
+
+
+def test_torn_budget_audit_under_concurrent_ticks():
+    """A ticking fleet + a budget-sampling auditor: the instantaneous
+    budget sum stays conserving through every mid-rebalance window
+    (shrink-first commit order), and no tick ever observes a tenant
+    interval under a torn budget (actions within one tick share one
+    params epoch per tenant)."""
+    spec = _three_tenants(epoch_intervals=2)
+    violations = []
+    stop = threading.Event()
+
+    def audit(fp):
+        while not stop.is_set():
+            total = sum(fp.budgets().values())
+            if total > M * (1 + 1e-9):
+                violations.append(total)
+
+    with FleetPlane(spec) as fp:
+        auditor = threading.Thread(target=audit, args=(fp,))
+        auditor.start()
+        try:
+            for _ in range(30):
+                actions = fp.tick()
+                for name, acts in actions.items():
+                    epochs = {a.epoch for a in acts}
+                    assert len(epochs) <= 1, (name, epochs)
+        finally:
+            stop.set()
+            auditor.join()
+    assert not violations
+    assert fp.epoch == 15
+
+
+# ---------------------------------------------------------------------------
+# Fused fleet sweep vs the scalar oracle
+# ---------------------------------------------------------------------------
+
+def _small_problem(k=3, n=6, t=120, seed=0):
+    rng = np.random.default_rng(seed)
+    base = rng.uniform(10.0, 45.0, (k, 1, 1))
+    wave = 1.0 + 0.4 * np.sin(
+        np.linspace(0, 6 * np.pi, t) + rng.uniform(0, np.pi, (k, n, 1)))
+    demand = (base * wave * (0.9 + 0.2 * rng.random((k, n, 1)))) * GiB
+    weights = np.array([3.0, 1.5, 1.0])[:k]
+    floors = np.array([10.0, 8.0, 0.0])[:k] * GiB
+    return demand.astype(np.float64), weights, floors
+
+
+def _gains(n=2):
+    p = paper_controller_params()
+    return grid_gains(p, lam=np.linspace(0.3, 0.9, n),
+                      r0=np.linspace(0.9, 0.96, n))
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_fleet_sweep_matches_reference(policy):
+    """The fused (tenants x nodes) jitted scan is pinned to the scalar
+    float64 oracle across all policies -- stats and streamed extras."""
+    demand, weights, floors = _small_problem()
+    gains = _gains()
+    kw = dict(node_memory=M, weights=weights, floors=floors,
+              policy=policy, priority_order=(2, 0, 1),
+              epoch_intervals=30, interval_s=0.1)
+    stats, extras = fleet_sweep_demand(demand, gains, **kw)
+    ref_stats, ref_extras = fleet_reference(demand, gains, **kw)
+    for f in FleetStats._fields:
+        got, want = np.asarray(getattr(stats, f)), getattr(ref_stats, f)
+        # p99 rides the streaming-quantile bracket plus order-statistic
+        # sensitivity to f32-vs-f64 closed-loop drift on a small sample
+        atol = 1e-2 if f == "p99_utilization" else 1e-4
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=atol,
+                                   err_msg=f)
+    for f in FleetExtras._fields:
+        np.testing.assert_allclose(
+            np.asarray(getattr(extras, f)), getattr(ref_extras, f),
+            rtol=2e-4, atol=1e-3, err_msg=f)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_fleet_sweep_extras_invariants(policy):
+    """The streamed worst-case slacks certify the arbitration
+    invariants held at every (epoch, node) the sweep performed."""
+    demand, weights, floors = _small_problem(seed=5)
+    stats, extras = fleet_sweep_demand(
+        demand, _gains(), node_memory=M, weights=weights, floors=floors,
+        policy=policy, epoch_intervals=20, interval_s=0.1)
+    ex = FleetExtras(*(np.asarray(f) for f in extras))
+    # conservation: sum_k B[k] <= M everywhere (1e-3 GiB ~ f32 rounding)
+    assert (ex.conservation_slack_gib >= -1e-3).all()
+    # floors held everywhere
+    assert (ex.floor_slack_gib >= -1e-3).all()
+    assert (ex.tenant_budget_min_gib <= ex.tenant_budget_mean_gib
+            + 1e-6).all()
+    # starvation-freedom: floors (or rotation) keep every tenant alive
+    if policy != "priority":
+        assert (ex.tenant_budget_min_gib > 0.0).all()
+    assert np.isfinite(np.asarray(stats.mean_utilization)).all()
+
+
+def test_fleet_sweep_chunk_invariance():
+    """Gain-chunking is invisible, exactly as in the lab engine."""
+    demand, weights, floors = _small_problem(k=2, n=4, t=60, seed=2)
+    gains = _gains(3)
+    kw = dict(node_memory=M, weights=weights[:2], floors=floors[:2],
+              epoch_intervals=20, interval_s=0.1)
+    base = fleet_sweep_demand(demand, gains, **kw)
+    for chunk in (2, 9):
+        other = fleet_sweep_demand(demand, gains, chunk=chunk, **kw)
+        for got, want, f in zip(other[0] + other[1], base[0] + base[1],
+                                FleetStats._fields + FleetExtras._fields):
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(want), err_msg=f)
+
+
+def test_fleet_sweep_single_device_node_shards_fallback():
+    """Requesting node sharding on one device falls back bit-exactly to
+    the unsharded program."""
+    demand, weights, floors = _small_problem(k=2, n=4, t=60, seed=3)
+    kw = dict(node_memory=M, weights=weights[:2], floors=floors[:2],
+              epoch_intervals=20, interval_s=0.1, devices=1)
+    plain = fleet_sweep_demand(demand, _gains(), node_shards=1, **kw)
+    sharded = fleet_sweep_demand(demand, _gains(), node_shards=4, **kw)
+    for got, want, f in zip(sharded[0] + sharded[1], plain[0] + plain[1],
+                            FleetStats._fields + FleetExtras._fields):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=f)
+
+
+def test_fleet_sweep_validates_args():
+    demand, weights, floors = _small_problem(k=2, n=4, t=60)
+    kw = dict(node_memory=M, weights=weights[:2], floors=floors[:2])
+    with pytest.raises(ValueError):                       # ragged epochs
+        fleet_sweep_demand(demand, _gains(), epoch_intervals=7, **kw)
+    with pytest.raises(ValueError):                       # bad order
+        fleet_sweep_demand(demand, _gains(), epoch_intervals=20,
+                           priority_order=(0, 0), **kw)
+    with pytest.raises(ValueError):
+        fleet_sweep_demand(demand[0], _gains(), epoch_intervals=20, **kw)
+    with pytest.raises(ValueError):
+        fleet_sweep_demand(demand, _gains(), epoch_intervals=20,
+                           node_memory=M, weights=weights,
+                           floors=np.zeros(3))            # (3,) vs k=2
+
+
+# ---------------------------------------------------------------------------
+# Scenario composition + runtime churn
+# ---------------------------------------------------------------------------
+
+def test_registered_fleet_scenarios():
+    names = list_fleet_scenarios()
+    assert {"hpcc-spark", "tenant-churn"} <= set(names)
+    fs = get_fleet_scenario("tenant-churn")
+    assert fs.n_tenants == 3 and fs.n_nodes == 24
+    d = fs.build_demand(seed=0)
+    assert d.shape == (3, 24, 480) and (d >= 0).all()
+    # tenants decorrelate under one seed but stay deterministic
+    assert np.array_equal(d, fs.build_demand(seed=0))
+    # composition validation
+    with pytest.raises(ValueError):                       # shape mismatch
+        FleetScenario("bad", tenants=(
+            FleetTenant("a", "runtime-churn"),
+            FleetTenant("b", "paper-c3-dynims60")))
+    with pytest.raises(ValueError):                       # ragged epochs
+        FleetScenario("bad", tenants=(FleetTenant("a", "runtime-churn"),),
+                      epoch_intervals=7)
+    with pytest.raises(KeyError):
+        get_fleet_scenario("no-such-fleet")
+
+
+def test_runtime_churn_scenario():
+    """The fault machinery actually drives the registered trace:
+    stragglers get squeezed then evicted, heartbeat failures collapse
+    demand to the OS baseline and recover."""
+    demand, events = churn_demand(n_nodes=12, n_intervals=240, seed=1)
+    assert demand.shape == (12, 240)
+    assert events["squeeze"] and events["evict"]
+    assert events["fail"] and events["recover"]
+    assert min(events["evict"]) > min(events["squeeze"])  # escalation
+    # a failed node's demand collapses toward the OS baseline
+    t_fail = events["fail"][0]
+    col = demand[:, t_fail]
+    assert col.min() <= FAILED_DEMAND * demand[:, 0].max() * 1.5
+    # deterministic in the seed
+    d2, e2 = churn_demand(n_nodes=12, n_intervals=240, seed=1)
+    assert np.array_equal(demand, d2) and events == e2
+    # and the lab registry serves the replay spec
+    spec = get_scenario("runtime-churn")
+    assert spec.family == "replay"
+    assert spec.build_demand(seed=0).shape == (24, 480)
+
+
+def test_run_fleet_sweep_tenant_churn():
+    fs = get_fleet_scenario("tenant-churn")
+    stats, extras = run_fleet_sweep(fs, _gains(), seed=0)
+    assert np.asarray(stats.mean_utilization).shape == (4,)
+    assert (np.asarray(extras.conservation_slack_gib) >= -1e-3).all()
+    assert (np.asarray(extras.floor_slack_gib) >= -1e-3).all()
+
+
+def test_cell_tenant_deployment():
+    """launch/cells wraps a benchmark cell's plane as a fleet tenant
+    with kind-derived priority and parameter-derived weight."""
+    from repro.launch.cells import DEFAULT_CELL_PRIORITY, cell_tenant
+    plane = _tenant_spec("cell", 10.0).plane
+    t = cell_tenant("hymba-1.5b", "decode_32k", plane=plane,
+                    floor_gib=4.0)
+    assert t.name == "hymba-1.5b:decode_32k"
+    assert t.priority == DEFAULT_CELL_PRIORITY["decode"] == 2
+    assert t.weight > 0 and t.floor_gib == 4.0
+    train = cell_tenant("hymba-1.5b", "train_4k", plane=plane)
+    assert train.priority == DEFAULT_CELL_PRIORITY["train"] == 0
+    # the tenant composes into an arbitrable fleet
+    spec = FleetSpec(tenants=(t.replace(name="serve"),
+                              train.replace(name="train")))
+    assert FleetArbiter(spec).initial_budgets(M)["serve"] > 0
+
+
+# ---------------------------------------------------------------------------
+# 2-D (gains x nodes) device mesh
+# ---------------------------------------------------------------------------
+
+MESH2D_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax
+from repro.core.cluster_sim import paper_controller_params
+from repro.core.traces import GiB, fleet_demand_traces
+from repro.lab import FleetStats, grid_gains, sweep_demand
+from repro.fleet import FleetExtras, fleet_sweep_demand
+assert len(jax.local_devices()) == 4
+p = paper_controller_params()
+gains = grid_gains(p, lam=(0.3, 0.6, 0.9, 1.2), r0=(0.9, 0.95))
+
+# lab engine on the (gains x nodes) mesh vs single device
+demand = fleet_demand_traces(32, 200, p.interval_s, seed=3)
+single = sweep_demand(demand, gains, node_memory=p.total_memory,
+                      interval_s=p.interval_s, devices=1)
+for ns in (2, 4):          # 2x2 and 1x4 meshes
+    multi = sweep_demand(demand, gains, node_memory=p.total_memory,
+                         interval_s=p.interval_s, node_shards=ns)
+    for f in FleetStats._fields:
+        np.testing.assert_allclose(
+            np.asarray(getattr(multi, f)), np.asarray(getattr(single, f)),
+            rtol=2e-4, atol=2e-3, err_msg=("lab", ns, f))
+
+# fleet engine: the composed two-level loop on the same meshes
+rng = np.random.default_rng(0)
+fdem = rng.uniform(10.0, 45.0, (3, 16, 120)) * GiB
+kw = dict(node_memory=p.total_memory, weights=np.array([3.0, 1.5, 1.0]),
+          floors=np.array([10.0, 8.0, 0.0]) * GiB, epoch_intervals=30,
+          interval_s=p.interval_s)
+fs, fe = fleet_sweep_demand(fdem, gains, devices=1, **kw)
+for ns in (2, 4):
+    ms, me = fleet_sweep_demand(fdem, gains, node_shards=ns, **kw)
+    for f in FleetStats._fields:
+        np.testing.assert_allclose(
+            np.asarray(getattr(ms, f)), np.asarray(getattr(fs, f)),
+            rtol=2e-4, atol=2e-3, err_msg=("fleet", ns, f))
+    for f in FleetExtras._fields:
+        np.testing.assert_allclose(
+            np.asarray(getattr(me, f)), np.asarray(getattr(fe, f)),
+            rtol=2e-4, atol=2e-3, err_msg=("fleet-extras", ns, f))
+print("MESH2D_PARITY_OK")
+"""
+
+
+@pytest.mark.slow
+def test_2d_mesh_matches_single_device():
+    """(gains x nodes) shard_map over 4 forced host devices agrees with
+    the single-device program for both the lab and fleet engines (the
+    single-device fallback itself is bit-exact; cross-device psum
+    reassociation allows small float drift)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run([sys.executable, "-c", MESH2D_SCRIPT],
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "MESH2D_PARITY_OK" in proc.stdout
