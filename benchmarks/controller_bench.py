@@ -89,6 +89,17 @@ def bench_fleet(n_nodes: int, seed: int = 0) -> dict:
     tick_scalar_ms = _bench(build_plane("scalar").tick, repeats=5)
     tick_array_ms = _bench(build_plane("array").tick, repeats=5)
 
+    # -- health-layer overhead: the same array tick with ChaosPlane
+    # faults landing on ~10% of samples, exercising validation,
+    # holdover, and the quarantine state machine every interval -------
+    from repro.runtime import ChaosSpec, FaultSpec, inject
+    chaos_plane = build_plane("array")
+    inject(chaos_plane, ChaosSpec(faults=(
+        FaultSpec("dropout", probability=0.05),
+        FaultSpec("nan", probability=0.05),
+    ), seed=seed))
+    tick_chaos_ms = _bench(chaos_plane.tick, repeats=5)
+
     return {
         "n_nodes": n_nodes,
         "law_scalar_ms": law_scalar_ms,
@@ -97,6 +108,8 @@ def bench_fleet(n_nodes: int, seed: int = 0) -> dict:
         "tick_scalar_ms": tick_scalar_ms,
         "tick_array_ms": tick_array_ms,
         "tick_speedup": tick_scalar_ms / tick_array_ms,
+        "tick_chaos_ms": tick_chaos_ms,
+        "health_overhead": tick_chaos_ms / tick_array_ms,
     }
 
 
@@ -113,11 +126,12 @@ def main() -> None:
         json.dump({"interval_decision_stage": results}, fh, indent=2)
 
     print(f"{'nodes':>6} {'law scalar':>11} {'law array':>10} {'speedup':>8} "
-          f"{'tick scalar':>12} {'tick array':>11}")
+          f"{'tick scalar':>12} {'tick array':>11} {'tick+chaos':>11}")
     for r in results:
         print(f"{r['n_nodes']:6d} {r['law_scalar_ms']:9.3f}ms "
               f"{r['law_array_ms']:8.3f}ms {r['law_speedup']:7.1f}x "
-              f"{r['tick_scalar_ms']:10.2f}ms {r['tick_array_ms']:9.2f}ms")
+              f"{r['tick_scalar_ms']:10.2f}ms {r['tick_array_ms']:9.2f}ms "
+              f"{r['tick_chaos_ms']:9.2f}ms")
     print(f"\nwrote {args.out}")
 
 

@@ -36,10 +36,12 @@ from .controller import (ActionHistory, CONTROL_TOPIC, ControlAction,
 from .eviction import (AdaptivePolicy, FIFOPolicy, LFUPolicy, LRUPolicy,
                        make_policy)
 from .monitor import (DeviceMemoryMonitor, HostMemoryMonitor, MemorySample,
-                      SimulatedMonitor)
+                      MonitorFault, SimulatedMonitor)
 from .plane import (ArrayController, CapturedTrace, ControlPlane,
-                    DEFAULT_TRACE_CAPACITY, MemoryPlane, NodeSpec, PlaneSpec,
-                    StoreSpec, TraceRecorder, make_fused_step)
+                    DEFAULT_TRACE_CAPACITY, FaultEvent, FaultLog,
+                    HealthPolicy, HealthReport, MemoryPlane, NodeHealth,
+                    NodeHealthInfo, NodeSpec, PlaneSpec, StoreSpec,
+                    TraceRecorder, make_fused_step, validate_sample)
 from .store import (EvictionReport, KVBlockPool, ManagedStore, ShardCache,
                     StoreRegistry, StoreStats)
 from .stream import AGG_TOPIC, RAW_TOPIC, AggregatedMetrics, MetricAggregator
@@ -51,13 +53,15 @@ __all__ = [
     "ArrayController", "CONTROL_TOPIC", "CapturedTrace", "ControlAction",
     "ControlPlane", "ControllerParams", "DEFAULT_TRACE_CAPACITY",
     "DeviceMemoryMonitor", "DynIMSController", "TraceRecorder",
-    "EvictionReport", "FIFOPolicy", "GiB", "HostMemoryMonitor",
+    "EvictionReport", "FIFOPolicy", "FaultEvent", "FaultLog", "GiB",
+    "HealthPolicy", "HealthReport", "HostMemoryMonitor",
     "IterativeAppSpec", "KVBlockPool", "LFUPolicy", "LRUPolicy",
     "ManagedStore", "MemoryPlane", "MemorySample", "MessageBus",
-    "MetricAggregator", "NodeSpec", "Phase", "PlaneSpec", "RAW_TOPIC",
+    "MetricAggregator", "MonitorFault", "NodeHealth", "NodeHealthInfo",
+    "NodeSpec", "Phase", "PlaneSpec", "RAW_TOPIC",
     "ShardCache", "Signal", "SimulatedMonitor", "StoreRegistry",
     "StoreSpec", "StoreStats", "TierSpec", "closed_loop_eigenvalue",
     "control_step", "fixed_point_capacity", "hpcc_trace", "hpl_slowdown",
     "is_stable", "make_fused_step", "make_policy", "settling_time",
-    "simulate_saturated_loop", "vectorized_step",
+    "simulate_saturated_loop", "validate_sample", "vectorized_step",
 ]

@@ -242,6 +242,20 @@ class DynIMSController:
             self._bus.publish(CONTROL_TOPIC, action)
         return action
 
+    def reset_node(self, node: str, u: float) -> bool:
+        """Re-seed one node's control state at capacity ``u``.
+
+        The quarantine-rejoin hook (see ``MemoryPlane.health``): the
+        law resumes from the fail-static grant with slope history
+        cleared instead of jumping back to the pre-quarantine state."""
+        with self._lock:
+            state = self._nodes.get(node)
+            if state is None:
+                return False
+            state.u = float(u)
+            state.v_prev = None
+            return True
+
     def squeeze(self, node: str, factor: float) -> bool:
         """Transiently clamp a node's stores to ``factor * u`` without
         moving the control state -- the controller re-grants on the next

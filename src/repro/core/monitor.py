@@ -20,8 +20,19 @@ from __future__ import annotations
 
 import json
 import time
+import zlib
 from dataclasses import dataclass, asdict
-from typing import Callable, Iterator, Optional, Protocol, Sequence
+from typing import Callable, Iterator, Mapping, Optional, Protocol, Sequence
+
+
+class MonitorFault(RuntimeError):
+    """A monitor failed to produce a sample (dropout / crash / timeout).
+
+    The health layer in :mod:`repro.core.plane` catches this (and any
+    other exception from ``sample()``) and degrades to the last-good
+    holdover instead of letting one dead sensor take the interval down.
+    ``repro.runtime.chaos`` raises it from injected fault proxies.
+    """
 
 
 @dataclass(frozen=True)
@@ -123,8 +134,21 @@ class DeviceMemoryMonitor:
         )
 
 
+#: Fault modes a SimulatedMonitor can deterministically inject.
+SIM_FAULT_KINDS = ("dropout", "freeze", "nan")
+
+
 class SimulatedMonitor:
-    """Trace- or callback-driven monitor for simulation and tests."""
+    """Trace- or callback-driven monitor for simulation and tests.
+
+    ``faults`` turns on deterministic fault injection: a mapping from
+    fault kind (``"dropout"`` raises :class:`MonitorFault`,
+    ``"freeze"`` re-delivers the previous sample verbatim, ``"nan"``
+    corrupts ``used``) to a per-tick probability.  Whether tick ``i``
+    faults -- and which kind fires -- is a pure function of
+    ``(fault_seed, node, i)``, so chaos tests replay bit-identically
+    with no wall-clock timing involved.
+    """
 
     def __init__(
         self,
@@ -133,6 +157,8 @@ class SimulatedMonitor:
         usage: Sequence[float] | Callable[[int], float],
         storage_used_fn: Optional[Callable[[], float]] = None,
         dt: float = 0.1,
+        faults: Optional[Mapping[str, float]] = None,
+        fault_seed: int = 0,
     ):
         self.node = node
         self.total = float(total)
@@ -140,19 +166,54 @@ class SimulatedMonitor:
         self._storage_used_fn = storage_used_fn or (lambda: 0.0)
         self._dt = dt
         self._i = 0
+        if faults:
+            unknown = set(faults) - set(SIM_FAULT_KINDS)
+            if unknown:
+                raise ValueError(
+                    f"unknown fault kinds {sorted(unknown)}; "
+                    f"choose from {SIM_FAULT_KINDS}")
+        self._faults = dict(faults or {})
+        self._fault_seed = int(fault_seed)
+        self._last: Optional[MemorySample] = None
+
+    def _fault_at(self, i: int) -> Optional[str]:
+        """Which fault (if any) fires at tick ``i`` -- pure, seeded."""
+        if not self._faults:
+            return None
+        import numpy as np
+        rng = np.random.default_rng(
+            [self._fault_seed, zlib.crc32(self.node.encode()), i])
+        for kind in SIM_FAULT_KINDS:          # fixed order: deterministic
+            p = self._faults.get(kind, 0.0)
+            if p > 0.0 and rng.random() < p:
+                return kind
+        return None
 
     def sample(self) -> MemorySample:
+        i = self._i
+        self._i += 1
         if callable(self._usage):
-            used = float(self._usage(self._i))
+            used = float(self._usage(i))
         else:
-            used = float(self._usage[min(self._i, len(self._usage) - 1)])
+            used = float(self._usage[min(i, len(self._usage) - 1)])
         s = MemorySample(
-            node=self.node, timestamp=self._i * self._dt,
+            node=self.node, timestamp=i * self._dt,
             used=used + self._storage_used_fn(),
             total=self.total, storage_used=float(self._storage_used_fn()),
             swap_used=max(0.0, used + self._storage_used_fn() - self.total),
         )
-        self._i += 1
+        kind = self._fault_at(i)
+        if kind == "dropout":
+            raise MonitorFault(f"{self.node}: simulated dropout at tick {i}")
+        if kind == "freeze" and self._last is not None:
+            return self._last                  # stuck sensor: stale repeat
+        if kind == "nan":
+            s = MemorySample(
+                node=s.node, timestamp=s.timestamp, used=float("nan"),
+                total=s.total, storage_used=s.storage_used,
+                swap_used=s.swap_used)
+            return s                           # corrupt: not cached as good
+        self._last = s
         return s
 
     def __iter__(self) -> Iterator[MemorySample]:

@@ -48,9 +48,12 @@ dropping a tick, and every action is stamped with the parameter epoch.
 from __future__ import annotations
 
 import dataclasses
+import enum
+import math
 import threading
 import time
 import warnings
+import zlib
 from collections import deque
 from typing import Callable, Dict, Iterable, List, Optional, Tuple, Union
 
@@ -230,6 +233,332 @@ def _fill_gaps(arr: np.ndarray) -> None:
 
 
 # ---------------------------------------------------------------------------
+# ChaosPlane: telemetry health, fault log, fail-static degradation
+# ---------------------------------------------------------------------------
+#
+# DynIMS's contract is that dynamic control must never be *worse* than
+# the static allocation it replaces (PAPER.md Sec. III): a late, frozen,
+# or non-finite observation acted on verbatim is exactly the
+# swap-storming failure the feedback model exists to prevent.  The
+# health layer below sits between the monitors and the law:
+#
+#     healthy --bad sample--> stale (publish last-good holdover)
+#     stale   --stale_budget exceeded--> quarantined (fail-static pin)
+#     quarantined --rejoin_intervals consecutive good--> healthy
+#
+# A quarantined node is pinned to the conservative fail-static grant
+# derived from ``u_min`` (the paper's most compute-protective static
+# configuration; Liang et al. arxiv 1712.05554 make the same move when
+# the workload model is unreliable) and its telemetry stops feeding the
+# law until the rejoin hysteresis clears.  Actuation failures never
+# abort an interval: they degrade to bounded, jittered exponential
+# backoff in *intervals* (no sleeping under any lock).
+
+#: Default bound on retained fault events (per plane).
+DEFAULT_FAULT_LOG = 256
+
+
+class NodeHealth(enum.Enum):
+    """Per-node telemetry health state."""
+
+    HEALTHY = "healthy"
+    STALE = "stale"
+    QUARANTINED = "quarantined"
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthPolicy:
+    """Degradation policy of a :class:`MemoryPlane`.
+
+    Fields:
+      stale_budget:     consecutive bad intervals a node may ride on its
+                        last-good holdover before quarantine.
+      rejoin_intervals: consecutive good samples a quarantined node must
+                        deliver before re-entering closed-loop control
+                        (rejoin hysteresis -- a flapping sensor stays
+                        quarantined).
+      fail_static_fraction: where the fail-static pin sits in
+                        ``[u_min, u_max]``; 0.0 (default) pins to
+                        ``u_min``, the most conservative static grant.
+      actuation_retries: consecutive actuation failures before the node
+                        is reported actuation-degraded (retries continue
+                        at the capped backoff).
+      retry_backoff_cap: max backoff between actuation retries, in
+                        control intervals (base 1, doubling, jittered).
+      sample_deadline_s: monitor sample slower than this is treated as
+                        stale -- a late observation is a wrong one
+                        (paper Sec. II.B).  None disables.
+      tick_deadline_s:  whole-tick watchdog; a slower interval is logged
+                        as a ``tick-deadline`` fault.  None disables.
+      fault_log:        bound on retained :class:`FaultEvent` records.
+      seed:             seeds the retry jitter (deterministic tests).
+    """
+
+    stale_budget: int = 3
+    rejoin_intervals: int = 5
+    fail_static_fraction: float = 0.0
+    actuation_retries: int = 3
+    retry_backoff_cap: int = 16
+    sample_deadline_s: Optional[float] = None
+    tick_deadline_s: Optional[float] = None
+    fault_log: int = DEFAULT_FAULT_LOG
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.stale_budget < 1:
+            raise ValueError("stale_budget must be >= 1")
+        if self.rejoin_intervals < 1:
+            raise ValueError("rejoin_intervals must be >= 1")
+        if not 0.0 <= self.fail_static_fraction <= 1.0:
+            raise ValueError("fail_static_fraction must be in [0, 1]")
+        if self.actuation_retries < 1:
+            raise ValueError("actuation_retries must be >= 1")
+        if self.retry_backoff_cap < 1:
+            raise ValueError("retry_backoff_cap must be >= 1")
+        if self.fault_log < 1:
+            raise ValueError("fault_log must be >= 1")
+
+    def fail_static_grant(self, u_min: float, u_max: float) -> float:
+        """The static capacity a quarantined node is pinned to."""
+        return u_min + self.fail_static_fraction * (u_max - u_min)
+
+    def replace(self, **kw) -> "HealthPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One observed fault, mirrored after :class:`ControlAction`."""
+
+    kind: str                 # sample-error | telemetry-invalid | ...
+    node: Optional[str]
+    tick: int                 # plane tick index when observed
+    timestamp: float
+    detail: str = ""
+
+
+class FaultLog:
+    """Bounded, thread-safe log of fault events (cf. ActionHistory)."""
+
+    def __init__(self, maxlen: int = DEFAULT_FAULT_LOG):
+        if maxlen < 1:
+            raise ValueError("fault log bound must be >= 1")
+        self.maxlen = maxlen
+        self._lock = threading.Lock()
+        self._log: deque = deque(maxlen=maxlen)     # guarded-by: _lock
+        self._counts: Dict[str, int] = {}           # guarded-by: _lock
+
+    def append(self, event: FaultEvent) -> None:
+        with self._lock:
+            self._log.append(event)
+            self._counts[event.kind] = self._counts.get(event.kind, 0) + 1
+
+    def snapshot(self, kind: Optional[str] = None,
+                 node: Optional[str] = None,
+                 limit: Optional[int] = None) -> List[FaultEvent]:
+        with self._lock:
+            out = list(self._log)
+        if kind is not None:
+            out = [e for e in out if e.kind == kind]
+        if node is not None:
+            out = [e for e in out if e.node == node]
+        if limit is not None:
+            out = out[-limit:]
+        return out
+
+    def counts(self) -> Dict[str, int]:
+        """Total events seen per kind (including evicted ones)."""
+        with self._lock:
+            return dict(self._counts)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._log)
+
+
+def validate_sample(s: MemorySample) -> Optional[str]:
+    """Why ``s`` must not reach the control law, or None if it may.
+
+    Rejects non-finite, non-positive-total, and negative telemetry --
+    the law divides by ``total`` and feeds ``used`` straight into the
+    grant, so any of these would poison the fleet state arrays.
+    """
+    for name in ("used", "total", "storage_used", "swap_used"):
+        v = getattr(s, name)
+        if not isinstance(v, (int, float)) or not math.isfinite(v):
+            return f"non-finite {name}={v!r}"
+    if s.total <= 0:
+        return f"non-positive total={s.total!r}"
+    if s.used < 0 or s.storage_used < 0 or s.swap_used < 0:
+        return (f"negative telemetry used={s.used} "
+                f"storage={s.storage_used} swap={s.swap_used}")
+    return None
+
+
+class _NodeHealthState:
+    """Mutable per-node health bookkeeping (guarded by the plane)."""
+
+    __slots__ = ("state", "last_good", "stale_ticks", "good_streak",
+                 "faults", "pin_grant")
+
+    def __init__(self, pin_grant: float):
+        self.state = NodeHealth.HEALTHY
+        self.last_good: Optional[MemorySample] = None
+        self.stale_ticks = 0
+        self.good_streak = 0
+        self.faults = 0
+        self.pin_grant = float(pin_grant)
+
+
+class _ResilientRegistry:
+    """Actuation shield: a StoreRegistry whose failures never escape.
+
+    A raising ``set_capacity`` (hung store, injected chaos, dead
+    transport) must not abort the whole fleet's interval, and must not
+    be hammered every tick while it is down.  Failures degrade to
+    bounded retry with exponential backoff *measured in apply calls*
+    (one per control interval) plus deterministic jitter -- nothing
+    ever sleeps, so the plane's tick path stays lock-discipline clean.
+    After ``actuation_retries`` consecutive failures the registry is
+    reported degraded and keeps retrying at the capped backoff.
+    """
+
+    def __init__(self, inner: StoreRegistry, node: str,
+                 policy: HealthPolicy, fault_log: FaultLog,
+                 clock: Optional[Callable[[], int]] = None):
+        self._inner = inner          # swapped by chaos injection proxies
+        self._node = node
+        self._policy = policy
+        self._fault_log = fault_log
+        self._clock = clock or (lambda: -1)
+        self._lock = threading.Lock()
+        self._failures = 0           # guarded-by: _lock (consecutive)
+        self._skip = 0               # guarded-by: _lock (backoff budget)
+        self._pending: Optional[float] = None   # guarded-by: _lock
+        self._degraded = False       # guarded-by: _lock
+        self._rng = np.random.default_rng(
+            [policy.seed, zlib.crc32(node.encode())])  # guarded-by: _lock
+
+    # -- delegation ---------------------------------------------------------
+    def register(self, store: ManagedStore, max_bytes: float) -> None:
+        self._inner.register(store, max_bytes)
+
+    def stores(self) -> List[ManagedStore]:
+        return self._inner.stores()
+
+    def total_used(self) -> float:
+        return self._inner.total_used()
+
+    def total_capacity(self) -> float:
+        return self._inner.total_capacity()
+
+    # -- resilient actuation ------------------------------------------------
+    def apply_capacity(self, u: float) -> list:
+        with self._lock:
+            if self._skip > 0:
+                self._skip -= 1
+                self._pending = float(u)
+                return []
+            inner = self._inner
+        try:
+            reports = inner.apply_capacity(u)
+        except Exception as exc:
+            self._on_failure(u, exc)
+            return []
+        with self._lock:
+            recovered = self._failures > 0
+            self._failures = 0
+            self._skip = 0
+            self._pending = None
+            self._degraded = False
+        if recovered:
+            self._fault_log.append(FaultEvent(
+                kind="actuation-recovered", node=self._node,
+                tick=self._clock(), timestamp=time.time()))
+        return reports
+
+    def _on_failure(self, u: float, exc: BaseException) -> None:
+        with self._lock:
+            self._failures += 1
+            backoff = min(2 ** (self._failures - 1),
+                          self._policy.retry_backoff_cap)
+            # jitter in [0, backoff): desynchronizes a fleet of nodes
+            # whose stores all died in the same interval
+            self._skip = backoff - 1 + int(self._rng.integers(0, backoff))
+            self._pending = float(u)
+            newly_degraded = (not self._degraded and
+                              self._failures > self._policy.actuation_retries)
+            if newly_degraded:
+                self._degraded = True
+            failures = self._failures
+        self._fault_log.append(FaultEvent(
+            kind="actuation-error", node=self._node, tick=self._clock(),
+            timestamp=time.time(),
+            detail=f"{type(exc).__name__}: {exc} (failure #{failures})"))
+        if newly_degraded:
+            self._fault_log.append(FaultEvent(
+                kind="actuation-degraded", node=self._node,
+                tick=self._clock(), timestamp=time.time(),
+                detail=f"{failures} consecutive failures; retrying at "
+                       f"<= {self._policy.retry_backoff_cap}-interval "
+                       "backoff"))
+
+    def status(self) -> Tuple[int, bool]:
+        """(consecutive failures, degraded?) for the health report."""
+        with self._lock:
+            return self._failures, self._degraded
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeHealthInfo:
+    """One node's health as reported by :meth:`MemoryPlane.health`."""
+
+    node: str
+    state: NodeHealth
+    stale_ticks: int
+    good_streak: int
+    faults: int
+    pin_grant: float
+    actuation_failures: int = 0
+    actuation_degraded: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthReport:
+    """Plane-wide degradation report (:meth:`MemoryPlane.health`)."""
+
+    ticks: int
+    deadline_misses: int
+    nodes: Dict[str, NodeHealthInfo]
+    fault_counts: Dict[str, int]
+
+    def quarantined(self) -> List[str]:
+        return [n for n, i in self.nodes.items()
+                if i.state is NodeHealth.QUARANTINED]
+
+    def degraded(self) -> List[str]:
+        """Nodes not in closed-loop control or with failing actuation."""
+        return [n for n, i in self.nodes.items()
+                if i.state is not NodeHealth.HEALTHY or i.actuation_degraded]
+
+    @property
+    def healthy(self) -> bool:
+        return not self.degraded() and self.deadline_misses == 0
+
+    def summary(self) -> str:
+        states = {s: 0 for s in NodeHealth}
+        for info in self.nodes.values():
+            states[info.state] += 1
+        faults = sum(self.fault_counts.values())
+        return (f"health: {states[NodeHealth.HEALTHY]} healthy / "
+                f"{states[NodeHealth.STALE]} stale / "
+                f"{states[NodeHealth.QUARANTINED]} quarantined of "
+                f"{len(self.nodes)} nodes; {faults} faults, "
+                f"{self.deadline_misses} deadline misses over "
+                f"{self.ticks} ticks")
+
+
+# ---------------------------------------------------------------------------
 # Declarative spec
 # ---------------------------------------------------------------------------
 
@@ -298,6 +627,9 @@ class PlaneSpec:
       record:     ReplayLoop capture: retain the last ``record`` control
                   intervals in a :class:`TraceRecorder` ring (0 = off;
                   enable later with :meth:`MemoryPlane.record`).
+      health:     degradation policy (:class:`HealthPolicy`); None uses
+                  the defaults (validation + holdover + quarantine on,
+                  deadlines off).
     """
 
     params: ControllerParams
@@ -310,6 +642,7 @@ class PlaneSpec:
     eviction: str = "lfu"
     transport: Union[MessageBus, Callable[[], MessageBus], None] = None
     record: int = 0
+    health: Optional[HealthPolicy] = None
 
     def __post_init__(self) -> None:
         if self.backend not in BACKENDS:
@@ -580,6 +913,21 @@ class ArrayController:
                 float(self._u[i]) * float(factor))
             return True
 
+    def reset_node(self, node: str, u: float) -> bool:
+        """Re-seed one node's control state at capacity ``u``.
+
+        The quarantine-rejoin hook: the law resumes from the
+        fail-static grant (feedforward history cleared) instead of
+        jumping back to the pre-quarantine capacity."""
+        with self._lock:
+            i = self._index.get(node)
+            if i is None:
+                return False
+            self._u[i] = float(u)
+            self._v_prev[i] = 0.0
+            self._has_prev[i] = False
+            return True
+
 
 # ---------------------------------------------------------------------------
 # The facade
@@ -613,6 +961,7 @@ class MemoryPlane:
                 spec.params, bus=self.bus, signal=spec.signal,
                 max_history=spec.history)
         self._monitors: Dict[str, MemoryMonitor] = {}  # guarded-by: _lock
+        self._registries: Dict[str, _ResilientRegistry] = {}  # guarded-by: _lock
         self._lock = threading.RLock()
         # Serializes whole control intervals against hot-swaps: tick()
         # holds it for the full sample -> decide -> actuate pipeline, so
@@ -621,6 +970,16 @@ class MemoryPlane:
         self._tick_lock = threading.Lock()
         self.recorder: Optional[TraceRecorder] = (  # guarded-by: _tick_lock
             TraceRecorder(spec.record) if spec.record else None)
+        # ChaosPlane degradation state.  _health_lock is a leaf under
+        # _tick_lock: tick() mutates the states while holding both,
+        # health() snapshots under _health_lock alone so a report never
+        # waits out a whole control interval.
+        self.health_policy = spec.health or HealthPolicy()
+        self.fault_log = FaultLog(self.health_policy.fault_log)
+        self._health_lock = threading.Lock()
+        self._health: Dict[str, _NodeHealthState] = {}  # guarded-by: _health_lock
+        self._ticks = 0                       # guarded-by: _health_lock
+        self._deadline_misses = 0             # guarded-by: _health_lock
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         for node_spec in spec.nodes:
@@ -662,13 +1021,25 @@ class MemoryPlane:
         """Bring one node under control; returns its registry.
 
         Either pass a pre-built ``registry`` or an iterable of
-        :class:`StoreSpec` / ``(store, max_bytes)`` pairs (not both)."""
+        :class:`StoreSpec` / ``(store, max_bytes)`` pairs (not both).
+        The returned registry is wrapped in the plane's actuation
+        shield: a raising store degrades to bounded backoff-retried
+        actuation instead of aborting the fleet's interval."""
         registry = NodeSpec(node, monitor, stores=tuple(stores),
                             registry=registry).build_registry()
+        shielded = _ResilientRegistry(
+            registry, node, self.health_policy, self.fault_log,
+            clock=self._tick_index)
+        effective = params or self.spec.params
+        pin = self.health_policy.fail_static_grant(
+            effective.u_min, effective.u_max)
         with self._lock:
             self._monitors[node] = monitor
-            self.controller.attach_node(node, registry, u0=u0, params=params)
-        return registry
+            self._registries[node] = shielded
+            self.controller.attach_node(node, shielded, u0=u0, params=params)
+        with self._health_lock:
+            self._health[node] = _NodeHealthState(pin)
+        return shielded
 
     def build_cache(self, name: str, capacity: float, *,
                     policy: Optional[str] = None, priority: int = 0,
@@ -750,18 +1121,194 @@ class MemoryPlane:
                 return self.controller.swap_params(params, fused=fused)
             return self.controller.swap_params(params)
 
+    # -- degradation / health -----------------------------------------------
+    def _tick_index(self) -> int:
+        with self._health_lock:
+            return self._ticks
+
+    def log_fault(self, kind: str, node: Optional[str] = None,
+                  detail: str = "") -> None:
+        """Record an externally observed fault (retune supervisor,
+        fleet rebalance rollback, ...) in the plane's bounded log."""
+        self.fault_log.append(FaultEvent(
+            kind=kind, node=node, tick=self._tick_index(),
+            timestamp=time.time(), detail=detail))
+
+    def health(self) -> HealthReport:
+        """Structured degradation report: per-node health state machine
+        position, actuation shield status, and fault counts.  Safe to
+        call from any thread; never waits out a control interval."""
+        with self._health_lock:
+            states = {n: (st.state, st.stale_ticks, st.good_streak,
+                          st.faults, st.pin_grant)
+                      for n, st in self._health.items()}
+            ticks = self._ticks
+            misses = self._deadline_misses
+        with self._lock:
+            registries = dict(self._registries)
+        nodes = {}
+        for name, (state, stale, streak, faults, pin) in states.items():
+            failures, degraded = (registries[name].status()
+                                  if name in registries else (0, False))
+            nodes[name] = NodeHealthInfo(
+                node=name, state=state, stale_ticks=stale,
+                good_streak=streak, faults=faults, pin_grant=pin,
+                actuation_failures=failures, actuation_degraded=degraded)
+        return HealthReport(ticks=ticks, deadline_misses=misses,
+                            nodes=nodes,
+                            fault_counts=self.fault_log.counts())
+
+    def _observe_node(self, name: str, monitor: MemoryMonitor,
+                      registry: Optional[_ResilientRegistry],
+                      tick: int) -> Optional[MemorySample]:
+        """Sample one node through the health state machine.
+
+        Returns the sample the law may act on this interval (fresh, or
+        the last-good holdover while stale), or None while the node is
+        quarantined / has no good sample yet.  Called under _tick_lock.
+        """
+        policy = self.health_policy
+        t0 = time.monotonic()
+        sample: Optional[MemorySample] = None
+        fault: Optional[Tuple[str, str]] = None
+        try:
+            sample = monitor.sample()
+        except Exception as exc:
+            fault = ("sample-error", f"{type(exc).__name__}: {exc}")
+        else:
+            reason = validate_sample(sample)
+            if reason is not None:
+                fault = ("telemetry-invalid", reason)
+            elif (policy.sample_deadline_s is not None
+                  and time.monotonic() - t0 > policy.sample_deadline_s):
+                # A sample that arrives after its deadline is as stale
+                # as one that never arrived (paper Sec. II.B).
+                fault = ("sample-slow",
+                         f"{time.monotonic() - t0:.3f}s "
+                         f"> {policy.sample_deadline_s}s")
+        events: List[FaultEvent] = []
+        with self._health_lock:
+            st = self._health.get(name)
+            if st is None:       # attached behind our back; adopt it
+                effective = self.spec.params
+                st = _NodeHealthState(policy.fail_static_grant(
+                    effective.u_min, effective.u_max))
+                self._health[name] = st
+            out, pin = self._transition(name, st, sample, fault,
+                                        tick, events)
+        for e in events:
+            self.fault_log.append(e)
+        if pin and registry is not None:
+            # (Re-)pin the fail-static grant outside _health_lock; the
+            # shield absorbs and backs off actuation failures.
+            registry.apply_capacity(st.pin_grant)
+        return out
+
+    def _transition(self, name: str, st: _NodeHealthState,
+                    sample: Optional[MemorySample],
+                    fault: Optional[Tuple[str, str]], tick: int,
+                    events: List[FaultEvent]) -> Tuple[
+                        Optional[MemorySample], bool]:
+        """Advance one node's health state machine by one interval.
+
+        Returns ``(sample_to_publish, pin_fail_static_now)``.  Called
+        with _health_lock held; appends pending events to ``events``
+        (logged by the caller after the lock is dropped).
+        """
+        policy = self.health_policy
+        now = time.time()
+        if fault is None:
+            assert sample is not None
+            if st.state is NodeHealth.QUARANTINED:
+                # Rejoin hysteresis: demand a sustained good streak, and
+                # ramp back up from the fail-static grant rather than
+                # jumping to the pre-quarantine capacity.
+                st.good_streak += 1
+                st.last_good = sample
+                if st.good_streak >= policy.rejoin_intervals:
+                    st.state = NodeHealth.HEALTHY
+                    st.stale_ticks = 0
+                    st.good_streak = 0
+                    self.controller.reset_node(name, st.pin_grant)
+                    events.append(FaultEvent(
+                        kind="rejoin", node=name, tick=tick, timestamp=now,
+                        detail=f"closed-loop control resumed from "
+                               f"fail-static grant {st.pin_grant:.3e}"))
+                    return sample, False
+                return None, True
+            if st.state is NodeHealth.STALE:
+                events.append(FaultEvent(
+                    kind="stale-recover", node=name, tick=tick,
+                    timestamp=now,
+                    detail=f"fresh sample after {st.stale_ticks} "
+                           "holdover intervals"))
+            st.state = NodeHealth.HEALTHY
+            st.stale_ticks = 0
+            st.good_streak = 0
+            st.last_good = sample
+            return sample, False
+        # -- faulted interval ------------------------------------------------
+        kind, detail = fault
+        st.faults += 1
+        events.append(FaultEvent(kind=kind, node=name, tick=tick,
+                                 timestamp=now, detail=detail))
+        if st.state is NodeHealth.QUARANTINED:
+            st.good_streak = 0
+            return None, True
+        st.stale_ticks += 1
+        st.state = NodeHealth.STALE
+        if st.stale_ticks >= policy.stale_budget or st.last_good is None:
+            # Sustained loss (or never a good sample): fail static.
+            st.state = NodeHealth.QUARANTINED
+            st.good_streak = 0
+            events.append(FaultEvent(
+                kind="quarantine", node=name, tick=tick, timestamp=now,
+                detail=f"{st.stale_ticks} bad intervals "
+                       f"(stale_budget={policy.stale_budget}); pinned to "
+                       f"fail-static grant {st.pin_grant:.3e}"))
+            return None, True
+        # Stale holdover: act on the last-good observation.
+        return st.last_good, False
+
     # -- control loop -------------------------------------------------------
     def tick(self) -> List[ControlAction]:
-        """One control interval: sample every node, run the law once."""
+        """One control interval: sample every node, run the law once.
+
+        Every sample passes telemetry validation and the per-node
+        health state machine first -- a faulty monitor degrades that
+        node (holdover, then fail-static quarantine) instead of feeding
+        the law garbage or taking the interval down with an exception.
+        """
+        t0 = time.monotonic()
         with self._tick_lock:
             with self._lock:
                 monitors = dict(self._monitors)
-            samples = {name: mon.sample() for name, mon in monitors.items()}
+                registries = dict(self._registries)
+            tick = self._tick_index()
+            samples: Dict[str, MemorySample] = {}
+            for name, mon in monitors.items():
+                s = self._observe_node(name, mon, registries.get(name),
+                                       tick)
+                if s is not None:
+                    samples[name] = s
             for sample in samples.values():
                 self.bus.publish(RAW_TOPIC, sample)
             actions = self.controller.flush()
             if self.recorder is not None:
                 self.recorder.record(samples, actions)
+            deadline = self.health_policy.tick_deadline_s
+            elapsed = time.monotonic() - t0
+            missed = deadline is not None and elapsed > deadline
+            with self._health_lock:
+                self._ticks += 1
+                if missed:
+                    self._deadline_misses += 1
+            if missed:
+                self.fault_log.append(FaultEvent(
+                    kind="tick-deadline", node=None, tick=tick,
+                    timestamp=time.time(),
+                    detail=f"interval took {elapsed:.3f}s "
+                           f"> {deadline}s"))
             return actions
 
     def run(self, duration_s: Optional[float] = None) -> None:

@@ -33,11 +33,13 @@ Lock hierarchy (acyclic, leaf-to-root; PlaneCheck PC-L001)::
 from __future__ import annotations
 
 import threading
+import time
 from typing import Dict, List, Optional, Tuple
 
 from ..core.controller import ControlAction
 from ..core.monitor import MemoryMonitor, MemorySample
-from ..core.plane import MemoryPlane, NodeSpec, PlaneSpec
+from ..core.plane import (DEFAULT_FAULT_LOG, FaultEvent, FaultLog,
+                          HealthReport, MemoryPlane, NodeSpec, PlaneSpec)
 from .arbiter import (FleetArbiter, FleetGrant, MIN_TENANT_BUDGET,
                       TenantTelemetry)
 from .specs import FleetSpec, TenantSpec
@@ -89,7 +91,7 @@ class _TenantRuntime:
     """One tenant's nested plane plus its telemetry accumulators."""
 
     __slots__ = ("spec", "budget", "plane", "u_max0", "u_min0", "stores",
-                 "util_sum", "util_n", "hits0", "misses0")
+                 "util_sum", "util_n", "hits0", "misses0", "last_telemetry")
 
     def __init__(self, spec: TenantSpec, budget: _BudgetRef,
                  plane: MemoryPlane) -> None:
@@ -105,6 +107,9 @@ class _TenantRuntime:
         self.util_n = 0
         self.hits0 = 0
         self.misses0 = 0
+        # last telemetry from a *non-quarantined* epoch; what operators
+        # see for a dark tenant -- guarded-by: FleetPlane._lock
+        self.last_telemetry: Optional[TenantTelemetry] = None
 
     def budget_params(self, budget: float):
         """The tenant's law params re-sized to ``budget`` bytes."""
@@ -147,6 +152,11 @@ class FleetPlane:
         self._tick_lock = threading.Lock()
         self._intervals = 0                 # guarded-by: _tick_lock
         self._last_grant: Optional[FleetGrant] = None  # guarded-by: _lock
+        # Fleet-level degradation log (tenant quarantines, rebalance
+        # rollbacks); tenant-internal faults live in each nested
+        # plane's own fault_log.
+        self.fault_log = FaultLog(DEFAULT_FAULT_LOG)
+        self._quarantined: set = set()      # guarded-by: _lock
         budgets0 = self.arbiter.initial_budgets(self.node_memory)
         self._tenants: Dict[str, _TenantRuntime] = {}
         for t in spec.tenants:
@@ -204,6 +214,35 @@ class FleetPlane:
         with self._lock:
             return self._last_grant
 
+    # -- degradation / health ------------------------------------------------
+    def log_fault(self, kind: str, node: Optional[str] = None,
+                  detail: str = "") -> None:
+        """Record a fleet-level fault (quarantine edge, rollback, ...).
+
+        ``_intervals`` is read without the tick lock: a report one
+        interval off is fine, a health probe stalling a control
+        interval is not.
+        """
+        self.fault_log.append(FaultEvent(
+            kind=kind, node=node, tick=self._intervals,
+            timestamp=time.time(), detail=detail))
+
+    def health(self) -> Dict[str, HealthReport]:
+        """Per-tenant degradation reports from the nested planes."""
+        return {name: rt.plane.health()
+                for name, rt in self._tenants.items()}
+
+    def quarantined_tenants(self) -> List[str]:
+        """Tenants currently dark: every node quarantined.  These bid
+        floors-only at the next rebalance (fail-static at fleet level)."""
+        with self._lock:
+            return sorted(self._quarantined)
+
+    @staticmethod
+    def _tenant_dark(report: HealthReport) -> bool:
+        return bool(report.nodes) and (
+            len(report.quarantined()) == len(report.nodes))
+
     def fleet_utilization(self) -> float:
         """Instantaneous fleet-level usage over physical memory."""
         used = 0.0
@@ -245,7 +284,21 @@ class FleetPlane:
         return actions
 
     def _snapshot_telemetry(self) -> Dict[str, TenantTelemetry]:
-        """Close the epoch's accumulators into per-tenant telemetry."""
+        """Close the epoch's accumulators into per-tenant telemetry.
+
+        A *dark* tenant -- every node quarantined by its nested plane's
+        health state machine -- is not trusted to bid: its accumulators
+        were fed by holdover/garbage telemetry.  It bids zero usage, so
+        the arbiter grants exactly its effective floor (fail-static at
+        fleet level), and its last non-quarantined telemetry is kept on
+        the runtime for operators.  Quarantine/rejoin edges land in the
+        fleet fault log.
+        """
+        # Health probes take the nested planes' locks; do them before
+        # taking self._lock so fleet _lock stays a leaf.
+        dark = {name for name, rt in self._tenants.items()
+                if self._tenant_dark(rt.plane.health())}
+        events: List[Tuple[str, str]] = []
         out: Dict[str, TenantTelemetry] = {}
         with self._lock:
             for name, rt in self._tenants.items():
@@ -254,12 +307,28 @@ class FleetPlane:
                 hits, misses = rt.hit_counts()
                 dh, dm = hits - rt.hits0, misses - rt.misses0
                 hit_ratio = dh / (dh + dm) if (dh + dm) > 0 else 1.0
-                out[name] = TenantTelemetry(
+                tel = TenantTelemetry(
                     usage_bytes=mean_util * budget, budget_bytes=budget,
                     hit_ratio=hit_ratio)
+                if name in dark:
+                    out[name] = TenantTelemetry(
+                        usage_bytes=0.0, budget_bytes=budget, hit_ratio=1.0)
+                else:
+                    out[name] = tel
+                    rt.last_telemetry = tel
                 rt.util_sum = 0.0
                 rt.util_n = 0
                 rt.hits0, rt.misses0 = hits, misses
+            for name in dark - self._quarantined:
+                events.append(("tenant-quarantine", name))
+            for name in self._quarantined - dark:
+                events.append(("tenant-rejoin", name))
+            self._quarantined = dark
+        for kind, name in events:
+            self.log_fault(kind, node=name,
+                           detail="all nodes quarantined; bidding floor"
+                           if kind == "tenant-quarantine"
+                           else "nodes healthy again; bidding normally")
         return out
 
     def rebalance(self, telemetry: Dict[str, TenantTelemetry]) -> FleetGrant:
@@ -272,16 +341,54 @@ class FleetPlane:
         committed at that tenant's next interval boundary, actions
         epoch-stamped -- which is exactly the torn-budget guarantee the
         single-plane retune loop already has.
+
+        **Partial-failure rollback**: if any tenant's budget swap
+        raises mid-commit, every already-committed tenant is restored
+        to its pre-rebalance budget in *reverse commit order* -- the
+        unwind retraces exactly the intermediate states the commit
+        passed through, each of which conserved ``sum(budgets) <=
+        node_memory``, so conservation holds at every instant of the
+        rollback too.  The fleet then keeps running on the old budgets
+        (fail-static) and a ``rebalance-rollback`` event is logged;
+        the failed grant is never published as ``last_grant``.
         """
         grant = self.arbiter.allocate(telemetry, self.node_memory)
         deltas = sorted(
             ((grant.budgets[name] - rt.budget.get(), name)
              for name, rt in self._tenants.items()))
-        for _, name in deltas:
-            rt = self._tenants[name]
-            b = grant.budgets[name]
-            rt.budget.set(b)
-            rt.plane.swap_params(rt.budget_params(b))
+        committed: List[Tuple[str, float]] = []   # (tenant, old budget)
+        try:
+            for _, name in deltas:
+                rt = self._tenants[name]
+                b = grant.budgets[name]
+                old = rt.budget.get()
+                rt.budget.set(b)
+                rt.plane.swap_params(rt.budget_params(b))
+                committed.append((name, old))
+        except Exception as exc:
+            # The failing tenant's budget ref may already hold the new
+            # value with no swap behind it: restore it first (deepest
+            # state), then unwind the committed prefix in reverse.
+            failed_rt = self._tenants[name]
+            failed_rt.budget.set(old)
+            for tname, told in reversed(committed):
+                trt = self._tenants[tname]
+                trt.budget.set(told)
+                try:
+                    trt.plane.swap_params(trt.budget_params(told))
+                except Exception:
+                    # Budget ref is restored either way; the nested
+                    # plane self-heals its M from agg.total next flush.
+                    pass
+            self.log_fault(
+                "rebalance-rollback", node=name,
+                detail=f"swap failed after {len(committed)} commits: "
+                       f"{type(exc).__name__}: {exc}")
+            with self._lock:
+                return self._last_grant if self._last_grant is not None \
+                    else FleetGrant(epoch=grant.epoch,
+                                    timestamp=grant.timestamp,
+                                    budgets=self.budgets(), policy="rollback")
         with self._lock:
             self._last_grant = grant
         return grant

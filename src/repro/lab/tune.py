@@ -428,17 +428,40 @@ class RetuneResult:
 
 
 class RetuneHandle:
-    """Join handle on a background :func:`retune_online` round."""
+    """Join handle on a supervised background :func:`retune_online` round.
 
-    def __init__(self, thread: threading.Thread, box: dict):
-        # The box is written only by the round thread and read only
-        # after join() -- synchronized by the join, not by a lock.
+    Besides joining for the result, it exposes the supervisor's live
+    counters: ``attempts`` (rounds started, including the first) and
+    ``restarts`` (rounds restarted after a crashed attempt) -- the
+    observable trace of the chaos drill's ``retune-kill`` fault.
+    """
+
+    def __init__(self, thread: threading.Thread, box: dict,
+                 stats: Optional[dict] = None,
+                 stats_lock: Optional[threading.Lock] = None):
+        # The box is written only by the supervisor thread and read
+        # only after join() -- synchronized by the join, not by a lock.
         self._thread = thread
         self._box = box          # guarded-by: join(_thread)
+        self._stats_lock = stats_lock or threading.Lock()
+        self._stats = stats if stats is not None else {
+            "attempts": 1, "restarts": 0}   # guarded-by: _stats_lock
 
     @property
     def done(self) -> bool:
         return not self._thread.is_alive()
+
+    @property
+    def attempts(self) -> int:
+        """Rounds started so far (>= 1 once the thread runs)."""
+        with self._stats_lock:
+            return self._stats["attempts"]
+
+    @property
+    def restarts(self) -> int:
+        """Rounds restarted after a crashed attempt."""
+        with self._stats_lock:
+            return self._stats["restarts"]
 
     def result(self, timeout: Optional[float] = None) -> RetuneResult:
         """Wait for the round and return its result (re-raising errors)."""
@@ -467,6 +490,8 @@ def retune_online(
     seed: int = 0,
     chunk: Optional[int] = None,
     devices=None,
+    restarts: int = 0,
+    restart_backoff_s: float = 0.05,
     **scenario_overrides,
 ) -> Union[RetuneResult, "RetuneHandle"]:
     """Re-tune a running ``MemoryPlane`` on its own captured workload.
@@ -490,33 +515,73 @@ def retune_online(
     :class:`RetuneHandle` immediately (``handle.result()`` joins).
     Extra keywords pass through to :meth:`ScenarioSpec.from_capture`
     (e.g. ``cache=`` to pin a hand-fitted :class:`CacheSpec`).
+
+    **Supervision** (``restarts > 0``): a crashed round -- capture,
+    sweep, or swap raising, e.g. under the chaos drill's
+    ``retune-kill`` fault -- is restarted up to ``restarts`` times with
+    exponential backoff (``restart_backoff_s * 2**attempt``, capped at
+    5 s).  Each retry re-captures (when ``capture`` was not pinned) and
+    re-reads the deployed params, so a restart tunes on fresh
+    telemetry.  The supervisor runs entirely on its own thread and
+    never holds the plane's tick lock across a round -- a wedged sweep
+    cannot stall control.  Restarts are visible as ``handle.restarts``
+    and, when the plane has a fault log, as ``retune-restart`` /
+    ``retune-dead`` events.
     """
-    if capture is None:
+    if restarts < 0:
+        raise ValueError("restarts must be >= 0")
+    if capture is None and restarts == 0:
+        # Unsupervised: capture eagerly so an empty recorder raises in
+        # the caller, not the round thread (legacy behavior).
         capture = plane.capture()
-    deployed = plane.params
-    spec = ScenarioSpec.from_capture(
-        capture, name=name, n_intervals=n_intervals, n_nodes=n_nodes,
-        fit_cache=fit_cache, **scenario_overrides)
     box: dict = {}
+    stats = {"attempts": 0, "restarts": 0}      # guarded-by: stats_lock
+    stats_lock = threading.Lock()
 
-    def _round() -> None:
-        try:
-            tune = tune_gains(spec, base_params=deployed, method=method,
-                              budget=budget, seed=seed, score_fn=score_fn,
-                              chunk=chunk, devices=devices)
-            swapped, epoch = False, None
-            if swap and tune.improvement > min_improvement:
-                epoch = plane.swap_params(tune.params)
-                swapped = True
-            box["result"] = RetuneResult(
-                scenario=spec, tune=tune, old_params=deployed,
-                params=tune.params, swapped=swapped, epoch=epoch,
-                capture=capture)
-        except BaseException as exc:             # surfaced via result()
-            box["error"] = exc
+    def _attempt() -> RetuneResult:
+        cap = capture if capture is not None else plane.capture()
+        deployed = plane.params
+        spec = ScenarioSpec.from_capture(
+            cap, name=name, n_intervals=n_intervals, n_nodes=n_nodes,
+            fit_cache=fit_cache, **scenario_overrides)
+        tune = tune_gains(spec, base_params=deployed, method=method,
+                          budget=budget, seed=seed, score_fn=score_fn,
+                          chunk=chunk, devices=devices)
+        swapped, epoch = False, None
+        if swap and tune.improvement > min_improvement:
+            epoch = plane.swap_params(tune.params)
+            swapped = True
+        return RetuneResult(
+            scenario=spec, tune=tune, old_params=deployed,
+            params=tune.params, swapped=swapped, epoch=epoch, capture=cap)
 
-    thread = threading.Thread(target=_round, daemon=True,
+    def _supervised() -> None:
+        import time as _time
+        log_fault = getattr(plane, "log_fault", None)
+        for attempt in range(restarts + 1):
+            with stats_lock:
+                stats["attempts"] += 1
+            try:
+                box["result"] = _attempt()
+                box.pop("error", None)           # earlier attempts' crash
+                return
+            except BaseException as exc:         # surfaced via result()
+                box["error"] = exc
+                if attempt >= restarts:
+                    if log_fault is not None and restarts > 0:
+                        log_fault("retune-dead",
+                                  detail=f"{type(exc).__name__}: {exc}")
+                    return
+                with stats_lock:
+                    stats["restarts"] += 1
+                if log_fault is not None:
+                    log_fault("retune-restart",
+                              detail=f"attempt {attempt + 1} died: "
+                                     f"{type(exc).__name__}: {exc}")
+                _time.sleep(min(restart_backoff_s * (2 ** attempt), 5.0))
+
+    thread = threading.Thread(target=_supervised, daemon=True,
                               name="retune-online")
     thread.start()
-    handle = RetuneHandle(thread, box)
+    handle = RetuneHandle(thread, box, stats, stats_lock)
     return handle.result() if block else handle

@@ -35,6 +35,9 @@ def main() -> None:
                     help="capture the KV-pool workload, re-tune the pool "
                          "gains on it online, hot-swap, serve a second wave")
     ap.add_argument("--retune-budget", type=int, default=16)
+    ap.add_argument("--retune-restarts", type=int, default=2,
+                    help="supervised retune: restart a crashed tuning "
+                         "round up to N times with backoff")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -80,12 +83,18 @@ def main() -> None:
         from ..lab.tune import retune_online
         print("-- ReplayLoop: re-tuning pool gains on the captured "
               "KV workload --")
-        result = retune_online(plane, name="kv-pool-replay",
-                               budget=args.retune_budget, block=True)
+        handle = retune_online(plane, name="kv-pool-replay",
+                               budget=args.retune_budget, block=False,
+                               restarts=args.retune_restarts)
+        result = handle.result()
         print("  ", result.summary())
+        if handle.restarts:
+            print(f"   retune supervisor: {handle.attempts} attempts, "
+                  f"{handle.restarts} restarts")
         p = plane.params
         print(f"   live params now: r0={p.r0:.4f} lam={p.lam:.4f} "
               f"lam_grant={p.lam_grant} (epoch {plane.epoch})")
+        print("  ", plane.health().summary())
         for _ in range(max(args.requests // 2, 1)):
             engine.submit(rng.integers(0, cfg.vocab_size, args.prompt_len),
                           max_new_tokens=args.max_new)

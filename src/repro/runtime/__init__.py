@@ -1,8 +1,13 @@
-"""Distributed runtime: failure detection, stragglers, elastic re-mesh."""
+"""Distributed runtime: failure detection, stragglers, chaos, re-mesh."""
 
+from .chaos import (ACTUATION_KINDS, ChaosError, ChaosHandle, ChaosSpec,
+                    FAULT_KINDS, FaultSpec, InjectedFault, TELEMETRY_KINDS,
+                    inject)
 from .elastic import ElasticMeshPlanner, MeshPlan
 from .fault import HeartbeatMonitor, WorkerState
 from .straggler import StragglerDetector
 
-__all__ = ["ElasticMeshPlanner", "HeartbeatMonitor", "MeshPlan",
-           "StragglerDetector", "WorkerState"]
+__all__ = ["ACTUATION_KINDS", "ChaosError", "ChaosHandle", "ChaosSpec",
+           "ElasticMeshPlanner", "FAULT_KINDS", "FaultSpec",
+           "HeartbeatMonitor", "InjectedFault", "MeshPlan",
+           "StragglerDetector", "TELEMETRY_KINDS", "WorkerState", "inject"]

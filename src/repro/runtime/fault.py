@@ -26,12 +26,20 @@ class WorkerState:
 
 
 class HeartbeatMonitor:
+    """Thread-safe: heartbeats, checks, and callback registration may
+    race freely.  Callback lists are mutated only under ``_lock`` and
+    snapshotted before firing, so a callback registered mid-``check``
+    never mutates the list a concurrent iteration is walking; the
+    callbacks themselves run *outside* the lock (they may call back
+    into the monitor without deadlocking, and a slow callback never
+    delays heartbeat intake)."""
+
     def __init__(self, interval_s: float = 1.0, timeout_intervals: int = 3):
         self.interval_s = interval_s
         self.timeout_s = interval_s * timeout_intervals
-        self._workers: Dict[str, WorkerState] = {}
-        self._on_failure: List[Callable[[str], None]] = []
-        self._on_recovery: List[Callable[[str], None]] = []
+        self._workers: Dict[str, WorkerState] = {}  # guarded-by: _lock
+        self._on_failure: List[Callable[[str], None]] = []   # guarded-by: _lock
+        self._on_recovery: List[Callable[[str], None]] = []  # guarded-by: _lock
         self._lock = threading.Lock()
 
     def register(self, worker: str, **meta) -> None:
@@ -49,8 +57,9 @@ class HeartbeatMonitor:
             was_healthy = st.healthy
             st.last_heartbeat = now
             st.healthy = True
+            callbacks = list(self._on_recovery)   # snapshot, fire unlocked
         if not was_healthy:
-            for cb in self._on_recovery:
+            for cb in callbacks:
                 cb(worker)
 
     def check(self, now: Optional[float] = None) -> List[str]:
@@ -62,16 +71,19 @@ class HeartbeatMonitor:
                 if st.healthy and now - st.last_heartbeat > self.timeout_s:
                     st.healthy = False
                     newly_failed.append(st.worker)
+            callbacks = list(self._on_failure)    # snapshot, fire unlocked
         for w in newly_failed:
-            for cb in self._on_failure:
+            for cb in callbacks:
                 cb(w)
         return newly_failed
 
     def on_failure(self, cb: Callable[[str], None]) -> None:
-        self._on_failure.append(cb)
+        with self._lock:
+            self._on_failure.append(cb)
 
     def on_recovery(self, cb: Callable[[str], None]) -> None:
-        self._on_recovery.append(cb)
+        with self._lock:
+            self._on_recovery.append(cb)
 
     def healthy_workers(self) -> List[str]:
         with self._lock:

@@ -1,0 +1,505 @@
+"""ChaosPlane: fault injection, the health state machine, fail-static
+degradation, retune supervision, and fleet-level quarantine.
+
+The invariants a dynamic controller must keep when its own sensors and
+actuators fail (the dual of the paper's claim that late telemetry is a
+swap storm): no grant beyond the caps, no action from non-finite
+telemetry, epoch-monotone histories, bounded quarantine entry and
+bounded rejoin, and -- one level up -- a FleetPlane that conserves
+budgets and squeezes a dark tenant to its floor.
+"""
+
+import math
+import threading
+import time
+
+import pytest
+
+from repro.core import (ControllerParams, GiB, HealthPolicy, MemoryPlane,
+                        MemorySample, MonitorFault, NodeHealth, NodeSpec,
+                        PlaneSpec, ShardCache, SimulatedMonitor, StoreSpec,
+                        StoreRegistry, validate_sample)
+from repro.core.cluster_sim import paper_controller_params
+from repro.core.plane import FaultLog, FaultEvent
+from repro.fleet import FleetPlane, FleetSpec, TenantSpec
+from repro.lab import retune_online
+from repro.runtime import (ChaosError, ChaosSpec, FAULT_KINDS, FaultSpec,
+                           HeartbeatMonitor, inject)
+
+M = 125.0 * GiB
+BACKENDS = ("scalar", "array")
+
+
+def _params(**kw):
+    kw.setdefault("total_memory", M)
+    kw.setdefault("u_max", 60.0 * GiB)
+    kw.setdefault("u_min", 5.0 * GiB)
+    return ControllerParams(**kw)
+
+
+def _plane(backend, n_nodes=4, policy=None, usage=None, **spec_kw):
+    params = _params()
+    usage = usage or (lambda k: 80.0 * GiB)
+    plane = MemoryPlane(PlaneSpec(
+        params=params, backend=backend,
+        health=policy or HealthPolicy(stale_budget=2, rejoin_intervals=3),
+        nodes=tuple(
+            NodeSpec(f"n{i}",
+                     monitor=SimulatedMonitor(f"n{i}", total=M, usage=usage),
+                     registry=StoreRegistry(), u0=30.0 * GiB)
+            for i in range(n_nodes)),
+        **spec_kw))
+    return plane, params
+
+
+# ---------------------------------------------------------------------------
+# Spec validation + deterministic scheduling
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("gremlin")
+    with pytest.raises(ValueError):
+        FaultSpec("nan", start=-1)
+    with pytest.raises(ValueError):
+        FaultSpec("nan", duration=0)
+    with pytest.raises(ValueError):
+        FaultSpec("nan", probability=0.0)
+    with pytest.raises(ValueError):
+        FaultSpec("nan", probability=1.5)
+    with pytest.raises(TypeError):
+        ChaosSpec(faults=("nan",))
+    f = FaultSpec("slow-sample", nodes=["a", "b"])
+    assert f.nodes == ("a", "b")
+    assert f.effective_magnitude() > 0.0          # kind default
+
+
+def test_chaos_schedule_is_deterministic_and_windowed():
+    spec = ChaosSpec(faults=(
+        FaultSpec("nan", nodes=("n0",), start=5, duration=10,
+                  probability=0.4),
+    ), seed=7)
+    fires = [spec.fires(0, "n0", t) for t in range(30)]
+    assert fires == [spec.fires(0, "n0", t) for t in range(30)]  # pure
+    assert not any(fires[:5]) and not any(fires[15:])            # window
+    assert any(fires[5:15])
+    assert not spec.fires(0, "n1", 7)                            # node filter
+    # a different seed reshuffles the probabilistic schedule
+    other = ChaosSpec(faults=spec.faults, seed=8)
+    assert fires != [other.fires(0, "n0", t) for t in range(30)]
+
+
+def test_validate_sample_catches_garbage():
+    good = MemorySample("n", 0.0, 10.0, 100.0)
+    assert validate_sample(good) is None
+    bad = [
+        MemorySample("n", 0.0, float("nan"), 100.0),
+        MemorySample("n", 0.0, float("inf"), 100.0),
+        MemorySample("n", 0.0, -5.0, 100.0),
+        MemorySample("n", 0.0, 10.0, 0.0),
+        MemorySample("n", 0.0, 10.0, 100.0, storage_used=-1.0),
+    ]
+    assert all(validate_sample(s) is not None for s in bad)
+
+
+def test_simulated_monitor_fault_modes_are_seeded():
+    def make(seed):
+        return SimulatedMonitor("n0", total=100.0,
+                                usage=lambda i: 50.0 + i,
+                                faults={"dropout": 0.3, "nan": 0.2},
+                                fault_seed=seed)
+
+    def run(mon, n=40):
+        out = []
+        for _ in range(n):
+            try:
+                u = mon.sample().used
+                out.append("nan" if math.isnan(u) else u)
+            except MonitorFault:
+                out.append("drop")
+        return out
+
+    a, b = run(make(3)), run(make(3))
+    assert a == b                                  # deterministic replay
+    assert a != run(make(4))                       # seed changes schedule
+    assert "drop" in a and "nan" in a
+    with pytest.raises(ValueError, match="unknown fault kinds"):
+        SimulatedMonitor("n", total=1.0, usage=lambda i: 1.0,
+                         faults={"gremlin": 0.5})
+
+
+def test_simulated_monitor_freeze_returns_last_good():
+    mon = SimulatedMonitor("n0", total=100.0, usage=lambda i: float(i),
+                           faults={"freeze": 1.0}, fault_seed=0)
+    first = mon.sample()          # nothing cached yet -> fresh sample
+    frozen = [mon.sample() for _ in range(3)]
+    assert all(s.used == first.used for s in frozen)
+
+
+# ---------------------------------------------------------------------------
+# The health state machine under injected faults (both backends)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_invariants_hold_under_full_catalog(backend):
+    """Grant caps, finite actions, and epoch monotonicity survive every
+    telemetry/actuation fault family at once."""
+    plane, params = _plane(backend, n_nodes=5)
+    spec = ChaosSpec(faults=(
+        FaultSpec("dropout", nodes=("n0",), start=3, duration=10,
+                  probability=0.5),
+        FaultSpec("freeze", nodes=("n1",), start=3, duration=8),
+        FaultSpec("nan", nodes=("n2",), start=3, duration=8),
+        FaultSpec("negative", nodes=("n2",), start=11, duration=4),
+        FaultSpec("crash", nodes=("n3",), start=5, duration=15),
+        FaultSpec("actuate-raise", nodes=("n4",), start=3, duration=8),
+        FaultSpec("actuate-partial", nodes=("n4",), start=12, duration=4),
+    ), seed=1)
+    audit = []
+    with inject(plane, spec) as chaos:
+        for _ in range(30):
+            audit.extend(plane.tick())
+    for _ in range(30):
+        audit.extend(plane.tick())
+    assert chaos.counts()                       # something actually fired
+    for a in audit:
+        assert math.isfinite(a.u_next) and math.isfinite(a.u_prev)
+        assert a.u_next <= params.u_max + 1.0
+        assert a.u_next >= params.u_min - 1.0
+        assert a.u_next <= M
+    for i in range(5):
+        epochs = [a.epoch for a in audit if a.node == f"n{i}"]
+        assert all(y >= x for x, y in zip(epochs, epochs[1:]))
+    report = plane.health()
+    assert not report.degraded(), report.summary()
+    assert report.fault_counts.get("quarantine", 0) >= 1
+    assert report.fault_counts.get("rejoin", 0) >= 1
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_quarantine_entry_and_rejoin_are_bounded(backend):
+    """A crashed node quarantines after exactly ``stale_budget`` failed
+    intervals and rejoins after ``rejoin_intervals`` good ones."""
+    policy = HealthPolicy(stale_budget=3, rejoin_intervals=4)
+    plane, _ = _plane(backend, n_nodes=2, policy=policy)
+    for _ in range(5):
+        plane.tick()                                   # warm last-good
+    crash = ChaosSpec(faults=(FaultSpec("crash", nodes=("n0",)),), seed=0)
+    handle = inject(plane, crash)
+    states = []
+    for _ in range(10):
+        plane.tick()
+        states.append(plane.health().nodes["n0"].state)
+    # holdover until the stale_budget-th consecutive bad interval
+    # trips quarantine -- entry is bounded, not instant
+    assert states[policy.stale_budget - 2] is not NodeHealth.QUARANTINED
+    assert states[policy.stale_budget - 1] is NodeHealth.QUARANTINED
+    assert states[-1] is NodeHealth.QUARANTINED
+    handle.revert()
+    rejoin_at = None
+    for t in range(policy.rejoin_intervals + 3):
+        plane.tick()
+        if plane.health().nodes["n0"].state is NodeHealth.HEALTHY:
+            rejoin_at = t
+            break
+    assert rejoin_at is not None, "node never rejoined after chaos lifted"
+    assert rejoin_at + 1 >= policy.rejoin_intervals    # hysteresis respected
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_quarantined_node_is_pinned_fail_static(backend):
+    """While quarantined, the node's stores sit at the fail-static
+    grant (u_min by default) and the law leaves it alone."""
+    policy = HealthPolicy(stale_budget=2, rejoin_intervals=3)
+    cache = ShardCache(capacity=30.0 * GiB)
+    params = _params()
+    plane = MemoryPlane(PlaneSpec(
+        params=params, backend=backend, health=policy,
+        nodes=(NodeSpec(
+            "n0",
+            monitor=SimulatedMonitor("n0", total=M,
+                                     usage=lambda k: 80.0 * GiB,
+                                     storage_used_fn=cache.used),
+            stores=(StoreSpec(cache, max_bytes=60.0 * GiB),),
+            u0=30.0 * GiB),)))
+    for _ in range(3):
+        plane.tick()
+    with inject(plane, ChaosSpec(
+            faults=(FaultSpec("dropout", nodes=("n0",)),), seed=0)):
+        for _ in range(policy.stale_budget + 4):
+            acted = plane.tick()
+        info = plane.health().nodes["n0"]
+        assert info.state is NodeHealth.QUARANTINED
+        assert info.pin_grant == policy.fail_static_grant(
+            params.u_min, params.u_max) == params.u_min
+        assert cache.capacity() == pytest.approx(info.pin_grant)
+        assert acted == []                   # law not running on n0
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_nan_telemetry_never_reaches_the_law(backend):
+    """Non-finite samples are replaced by last-good holdover; the grant
+    trajectory stays finite and inside the caps throughout."""
+    plane, params = _plane(backend, n_nodes=1)
+    for _ in range(3):
+        plane.tick()
+    u_before = plane.capacity("n0")
+    with inject(plane, ChaosSpec(
+            faults=(FaultSpec("nan", nodes=("n0",), duration=2),), seed=0)):
+        acts = plane.tick() + plane.tick()
+    # holdover keeps the loop running on the last-good observation
+    assert acts, "stale holdover should keep the law running"
+    for a in acts:
+        assert math.isfinite(a.u_next)
+        assert params.u_min <= a.u_next <= params.u_max
+    assert math.isfinite(plane.capacity("n0"))
+    assert plane.health().fault_counts["telemetry-invalid"] == 2
+    assert u_before == pytest.approx(plane.capacity("n0"), rel=0.5)
+
+
+def test_actuation_retry_backoff_and_recovery():
+    """A wedged store degrades to bounded backoff (no unbounded retry
+    storm) and recovers on the first successful apply."""
+    policy = HealthPolicy(actuation_retries=2, retry_backoff_cap=4)
+    plane, _ = _plane("scalar", n_nodes=1, policy=policy)
+    for _ in range(2):
+        plane.tick()
+    with inject(plane, ChaosSpec(
+            faults=(FaultSpec("actuate-raise", nodes=("n0",),
+                              duration=6),), seed=0)):
+        for _ in range(6):
+            plane.tick()
+        info = plane.health().nodes["n0"]
+        assert info.actuation_degraded      # retries exhausted -> flagged
+        assert info.actuation_failures >= policy.actuation_retries
+        counts = plane.fault_log.counts()
+        # backoff skips apply calls: strictly fewer errors than ticks
+        assert counts["actuation-error"] < 6
+        assert counts.get("actuation-degraded", 0) == 1
+    for _ in range(2 * policy.retry_backoff_cap + 2):
+        plane.tick()
+    info = plane.health().nodes["n0"]
+    assert not info.actuation_degraded and info.actuation_failures == 0
+    assert plane.fault_log.counts().get("actuation-recovered", 0) == 1
+
+
+def test_chaos_revert_restores_the_plane():
+    plane, _ = _plane("scalar", n_nodes=2)
+    mon0 = plane._monitors["n0"]
+    inner0 = plane._registries["n0"]._inner
+    tick0 = plane.tick
+    handle = inject(plane, ChaosSpec(
+        faults=(FaultSpec("crash",), FaultSpec("retune-kill")), seed=0))
+    assert plane._monitors["n0"] is not mon0
+    assert plane._registries["n0"]._inner is not inner0
+    handle.revert()
+    handle.revert()                          # idempotent
+    assert plane._monitors["n0"] is mon0
+    assert plane._registries["n0"]._inner is inner0
+    assert plane.tick == tick0
+    assert plane.tick()                      # clean plane ticks normally
+
+
+def test_fault_log_is_bounded():
+    log = FaultLog(maxlen=4)
+    for i in range(10):
+        log.append(FaultEvent(kind="k", node="n", tick=i, timestamp=0.0))
+    assert len(log) == 4
+    assert [e.tick for e in log.snapshot()] == [6, 7, 8, 9]
+    assert log.counts() == {"k": 10}         # counts survive eviction
+
+
+def test_tick_deadline_watchdog():
+    policy = HealthPolicy(tick_deadline_s=1e-9)
+    plane, _ = _plane("scalar", n_nodes=1, policy=policy)
+    plane.tick()
+    report = plane.health()
+    assert report.deadline_misses == 1
+    assert report.fault_counts.get("tick-deadline", 0) == 1
+
+
+# ---------------------------------------------------------------------------
+# Retune supervision
+# ---------------------------------------------------------------------------
+
+def _recording_plane(ticks=30):
+    plane, _ = _plane(
+        "array", n_nodes=3, record=ticks,
+        usage=lambda k: (60.0 + 30.0 * math.sin(0.3 * k)) * GiB)
+    for _ in range(ticks):
+        plane.tick()
+    return plane
+
+
+def test_retune_supervisor_restarts_after_kill():
+    plane = _recording_plane()
+    real_capture = plane.capture
+    boom = [2]                               # first two rounds die
+
+    def flaky_capture(*a, **kw):
+        if boom[0] > 0:
+            boom[0] -= 1
+            raise ChaosError("injected retune kill")
+        return real_capture(*a, **kw)
+
+    plane.capture = flaky_capture
+    handle = retune_online(plane, method="random", budget=4, seed=0,
+                           block=False, swap=False, restarts=4,
+                           restart_backoff_s=0.01)
+    result = handle.result(timeout=300)
+    assert handle.attempts == 3 and handle.restarts == 2
+    assert result.tune.score >= result.tune.baseline_score
+    counts = plane.fault_log.counts()
+    assert counts.get("retune-restart", 0) == 2
+    assert "retune-dead" not in counts
+
+
+def test_retune_supervisor_gives_up_and_reports_dead():
+    plane = _recording_plane(ticks=10)
+    plane.capture = lambda *a, **kw: (_ for _ in ()).throw(
+        ChaosError("wedged"))
+    handle = retune_online(plane, block=False, restarts=2,
+                           restart_backoff_s=0.01)
+    with pytest.raises(ChaosError):
+        handle.result(timeout=60)
+    assert handle.attempts == 3 and handle.restarts == 2
+    assert plane.fault_log.counts().get("retune-dead", 0) == 1
+
+
+def test_retune_unsupervised_keeps_legacy_eager_capture():
+    plane, _ = _plane("scalar", n_nodes=1)     # not recording
+    with pytest.raises(ValueError, match="not recording"):
+        retune_online(plane, block=False)      # raises in the caller
+
+
+# ---------------------------------------------------------------------------
+# FleetPlane: quarantined tenants and rollback
+# ---------------------------------------------------------------------------
+
+def _fleet(n_nodes=2, epoch_intervals=3):
+    params = _params(interval_s=0.01)
+    policy = HealthPolicy(stale_budget=2, rejoin_intervals=2)
+
+    def tenant(name, usage_gib, **kw):
+        nodes = tuple(
+            NodeSpec(f"{name}-n{i}", monitor=SimulatedMonitor(
+                f"{name}-n{i}", total=M,
+                usage=lambda t, g=usage_gib: g * GiB))
+            for i in range(n_nodes))
+        return TenantSpec(name, PlaneSpec(params=params, nodes=nodes,
+                                          health=policy), **kw)
+
+    return FleetPlane(FleetSpec(tenants=(
+        tenant("victim", 40.0, weight=2.0, floor_gib=8.0),
+        tenant("bystander", 30.0, weight=1.0, floor_gib=8.0),
+    ), epoch_intervals=epoch_intervals))
+
+
+def test_fleet_quarantined_tenant_gets_floor_and_rejoins():
+    fleet = _fleet()
+    floor = 8.0 * GiB
+    with fleet:
+        for _ in range(6):
+            fleet.tick()
+        pre = fleet.budgets()
+        assert pre["victim"] > floor * 1.5       # bidding normally
+        handle = inject(fleet.plane("victim"), ChaosSpec(
+            faults=(FaultSpec("crash", nodes=("victim-n0",
+                                              "victim-n1")),), seed=0))
+        floored = False
+        for _ in range(12):
+            fleet.tick()
+            b = fleet.budgets()
+            assert sum(b.values()) <= M + 1.0    # conservation, every tick
+            if ("victim" in fleet.quarantined_tenants()
+                    and b["victim"] <= floor + 1.0):
+                floored = True
+        assert floored, "dark tenant never squeezed to its floor"
+        assert fleet.budgets()["bystander"] > floor  # bystander unharmed
+        vic = fleet._tenants["victim"]
+        assert vic.last_telemetry is not None        # pre-chaos telemetry
+        assert vic.last_telemetry.usage_bytes > 0.0  # kept for operators
+        handle.revert()
+        for _ in range(14):
+            fleet.tick()
+            assert sum(fleet.budgets().values()) <= M + 1.0
+        assert fleet.quarantined_tenants() == []
+        assert fleet.budgets()["victim"] > floor * 1.5   # budget regrown
+        counts = fleet.fault_log.counts()
+        assert counts.get("tenant-quarantine", 0) >= 1
+        assert counts.get("tenant-rejoin", 0) >= 1
+
+
+def test_fleet_rebalance_rolls_back_on_partial_swap_failure():
+    fleet = _fleet()
+    with fleet:
+        for _ in range(6):
+            fleet.tick()
+        before = fleet.budgets()
+        grant_before = fleet.last_grant()
+        # Wedge one tenant's swap: the next rebalance must unwind.
+        bystander = fleet._tenants["bystander"].plane
+        real_swap = bystander.swap_params
+        bystander.swap_params = lambda *a, **kw: (_ for _ in ()).throw(
+            RuntimeError("wedged swap"))
+        telemetry = fleet._snapshot_telemetry()
+        grant = fleet.rebalance(telemetry)
+        after = fleet.budgets()
+        assert after == before                       # fully unwound
+        assert sum(after.values()) <= M + 1.0
+        assert fleet.last_grant() == grant_before    # failed grant unpublished
+        assert grant == grant_before
+        assert fleet.fault_log.counts().get("rebalance-rollback", 0) == 1
+        bystander.swap_params = real_swap
+        fleet.tick()                                 # fleet still ticks
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatMonitor race hardening
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_callbacks_fire_outside_the_lock():
+    hb = HeartbeatMonitor(interval_s=0.01, timeout_intervals=1)
+    hb.register("w0")
+    seen = []
+    # A callback that re-enters the monitor would deadlock if fired
+    # under the lock.
+    hb.on_failure(lambda w: seen.append(("fail", w, hb.failed_workers())))
+    hb.on_recovery(lambda w: seen.append(("rec", w, hb.healthy_workers())))
+    assert hb.check(now=time.monotonic() + 1.0) == ["w0"]
+    hb.heartbeat("w0")
+    assert ("fail", "w0", ["w0"]) in seen
+    assert ("rec", "w0", ["w0"]) in seen
+
+
+def test_heartbeat_concurrent_registration_and_check():
+    hb = HeartbeatMonitor(interval_s=0.001, timeout_intervals=1)
+    for i in range(16):
+        hb.register(f"w{i}")
+    errors = []
+    stop = threading.Event()
+
+    def churn():
+        try:
+            while not stop.is_set():
+                hb.on_failure(lambda w: None)
+                hb.on_recovery(lambda w: None)
+                hb.heartbeat("w0")
+        except Exception as exc:                     # pragma: no cover
+            errors.append(exc)
+
+    threads = [threading.Thread(target=churn) for _ in range(4)]
+    for t in threads:
+        t.start()
+    deadline = time.monotonic() + 0.5
+    try:
+        while time.monotonic() < deadline:
+            hb.check(now=time.monotonic() + 1.0)
+            for i in range(16):
+                hb.heartbeat(f"w{i}")
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    assert not errors
+    assert set(hb.healthy_workers()) == {f"w{i}" for i in range(16)}
