@@ -14,6 +14,16 @@ Table I gains) across engines and knobs:
   (resident set, hit curve, evict/refill flux, modeled app runtime in
   the scan carry): the cache-dynamics overhead over the saturated
   store.
+* ``pallas_sweep_G`` / ``pallas_sweep_cache_G`` -- PR 9's fused
+  PallasSweep engine (``engine="pallas"``) on the same grid.
+* ``pallas_halving_cache_512`` -- in-scan successive halving over 512
+  cache-on candidates in ONE dispatch.  Its throughput is the
+  **grid-equivalent effective rate**: G*T*N updates a grid tuner would
+  have run, divided by the halving wall time (the kernel masks
+  dominated lanes dead at T/8 and T/2, executing ~27% of the
+  lane-steps).  ``--engine both`` gates this row at >= 10x the
+  same-run ``lab_sweep_cache_G`` throughput -- the PR-9 acceptance
+  claim, measured on the same machine in the same process.
 
 The figure of merit is **node*interval*config closed-loop updates per
 second**.  Writes two artifacts at the repo root:
@@ -23,13 +33,15 @@ second**.  Writes two artifacts at the repo root:
 * ``BENCH_sweep.json`` -- ``chunked_throughput`` (chunk-size sweep on
   the device-resident path), ``device_scaling`` (gain axis
   ``shard_map``'d over forced host devices), ``time_to_best`` (grid vs
-  successive-halving time-to-best-gain on swap-storm).
+  successive-halving time-to-best-gain on swap-storm), and
+  ``smoke_reference_pallas`` (the PallasSweep smoke rows CI gates).
 
 Usage:
 
     PYTHONPATH=src python benchmarks/lab_bench.py [--nodes 4096]
-    PYTHONPATH=src python benchmarks/lab_bench.py --smoke \
-        --check-baseline BENCH_lab.json   # CI regression gate
+    PYTHONPATH=src python benchmarks/lab_bench.py --smoke --engine both \
+        --check-baseline BENCH_lab.json \
+        --check-pallas-baseline BENCH_sweep.json   # CI regression gates
 
 The smoke run times the small reference shape only (no artifacts
 unless ``--out``/``--sweep-out`` is given) and, with
@@ -37,6 +49,8 @@ unless ``--out``/``--sweep-out`` is given) and, with
 ``python_loop`` row regresses more than ``--max-regress`` (default
 20%) against the checked-in ``smoke_reference`` -- normalizing by the
 python-loop row keeps the gate honest across machine speeds.
+``--check-pallas-baseline`` applies the same ratio-of-ratios gate to
+the PallasSweep rows against ``smoke_reference_pallas``.
 """
 
 from __future__ import annotations
@@ -119,6 +133,104 @@ def bench_engines(n_nodes: int, n_intervals: int, n_configs: int,
     for r in rows:
         r["speedup_vs_python_loop"] = r["throughput_upd_per_s"] / base
     return rows
+
+
+HALVING_CANDIDATES = 512
+TENX_FLOOR = 10.0
+
+
+def _halving_gains(n: int):
+    """An n-point (lam x r0) grid (the smallest k x k grid covering n,
+    sliced to exactly n lanes)."""
+    k = int(np.ceil(np.sqrt(n)))
+    return _bench_gains(k * k).take(np.arange(n))
+
+
+def bench_pallas(n_nodes: int, n_intervals: int, n_configs: int,
+                 xla_rows: list, seed: int = 0) -> list:
+    """PallasSweep rows at the same shape as :func:`bench_engines`.
+
+    ``xla_rows`` is the same-run output of :func:`bench_engines`: each
+    pallas row's ``speedup_vs_xla`` divides by the matching same-run
+    XLA row (sweep vs sweep, cache vs cache, halving vs the cache
+    sweep it replaces), so both the baseline gate and the >= 10x claim
+    are same-process, same-machine comparisons.
+    """
+    from repro.core.cluster_sim import paper_controller_params
+    from repro.core.traces import fleet_demand_traces
+    from repro.lab import GainSet, get_scenario, sweep_demand
+    from repro.lab.pallas_sweep import halving_sweep
+
+    p = paper_controller_params()
+    demand = fleet_demand_traces(n_nodes, n_intervals, p.interval_s,
+                                 seed=seed)
+    gains = _bench_gains(n_configs)
+    cache = get_scenario("spark-iterative-cache").cache
+    kw = dict(node_memory=p.total_memory, interval_s=p.interval_s)
+    rows = [
+        _row(f"pallas_sweep_{len(gains)}", n_nodes, n_intervals, len(gains),
+             _best(lambda: sweep_demand(demand, gains, engine="pallas",
+                                        **kw))),
+        _row(f"pallas_sweep_cache_{len(gains)}", n_nodes, n_intervals,
+             len(gains),
+             _best(lambda: sweep_demand(demand, gains, engine="pallas",
+                                        cache=cache, **kw))),
+    ]
+    # In-scan halving: one dispatch tunes HALVING_CANDIDATES cache-on
+    # lanes.  throughput_upd_per_s is the grid-equivalent effective
+    # rate (G*T*N over the halving wall time); lane_steps_frac records
+    # how much of that grid the masked kernel actually executed.
+    big = _halving_gains(HALVING_CANDIDATES)
+    base = GainSet.from_params(p)
+    el = _best(lambda: halving_sweep(demand, big, base, cache=cache, **kw))
+    from repro.lab.pallas_sweep import TILE_GAINS, halving_schedule
+    horizons, keeps = halving_schedule(
+        n_intervals, len(big), (0.125, 0.5, 1.0), 0.25, 4)
+    pad = lambda n: -(-n // TILE_GAINS) * TILE_GAINS
+    counts = [len(big) + 1] + [k + 1 for k in keeps]
+    lane_steps = sum(pad(c) * (h - h0) for c, h, h0 in
+                     zip(counts, horizons, [0] + horizons[:-1]))
+    halving_row = _row(
+        f"pallas_halving_cache_{len(big)}", n_nodes, n_intervals,
+        len(big), el,
+        effective="grid-equivalent",
+        lane_steps_frac=lane_steps / (len(big) * n_intervals))
+    rows.append(halving_row)
+    # Normalize by the same-run XLA rows, not python_loop: both sides
+    # are compute-bound scans of the same math, so the ratio is stable
+    # across machines (python_loop is dispatch-bound and skews 2-3x
+    # between hosts, which would poison a checked-in baseline).
+    xla = {r["engine"]: r for r in xla_rows}
+    ref_of = {
+        f"pallas_sweep_{len(gains)}": f"lab_sweep_{len(gains)}",
+        f"pallas_sweep_cache_{len(gains)}": f"lab_sweep_cache_{len(gains)}",
+        halving_row["engine"]: f"lab_sweep_cache_{len(gains)}",
+    }
+    for r in rows:
+        ref = xla.get(ref_of[r["engine"]])
+        if ref:
+            r["speedup_vs_xla"] = (r["throughput_upd_per_s"]
+                                   / ref["throughput_upd_per_s"])
+    if "speedup_vs_xla" in halving_row:
+        halving_row["cache_on_speedup_vs_xla"] = \
+            halving_row["speedup_vs_xla"]
+    return rows
+
+
+def check_tenx_gate(pallas_rows: list) -> int:
+    """The PR-9 acceptance claim as a hard CI gate: the in-scan halving
+    row's grid-equivalent rate >= 10x the same-run XLA cache-on sweep."""
+    row = next((r for r in pallas_rows
+                if r["engine"].startswith("pallas_halving_cache")), None)
+    if row is None or "cache_on_speedup_vs_xla" not in row:
+        print("# 10x gate: no halving row to check")
+        return 1
+    ratio = row["cache_on_speedup_vs_xla"]
+    ok = ratio >= TENX_FLOOR
+    print(f"# 10x gate: in-scan halving effective rate is {ratio:.1f}x the "
+          f"same-run XLA cache-on sweep (floor {TENX_FLOOR:.0f}x) -> "
+          f"{'OK' if ok else 'FAIL'}")
+    return 0 if ok else 1
 
 
 def bench_chunks(n_nodes: int, n_intervals: int, n_configs: int,
@@ -228,31 +340,38 @@ def bench_time_to_best(scenario: str = "swap-storm", budget: int = 64,
 
 
 def check_baseline(smoke_rows: list, baseline_path: str,
-                   max_regress: float) -> int:
+                   max_regress: float, section: str = "smoke_reference",
+                   prefix: str = "lab_sweep",
+                   ratio_key: str = "speedup_vs_python_loop") -> int:
     """Compare the smoke sweep speedups against the checked-in ones.
 
-    Every ``lab_sweep*`` row present in both runs is gated (the
+    Every ``{prefix}*`` row present in both runs is gated (the
     cache-off sweep AND the CacheLoop sweep), each normalized by its
-    own run's ``python_loop`` row so runner speed cancels.
+    own run's ``python_loop`` row so runner speed cancels.  The pallas
+    gate reuses this ratio-of-ratios with ``section=
+    "smoke_reference_pallas"``/``prefix="pallas"`` and the
+    cross-engine ``speedup_vs_xla`` ratio (compute-bound on both
+    sides, so it cancels machine skew that the dispatch-bound
+    python_loop row does not).
     """
     with open(baseline_path) as fh:
         doc = json.load(fh)
-    ref_rows = doc.get("smoke_reference") or []
+    ref_rows = doc.get(section) or []
     ref = {r["engine"]: r for r in ref_rows}
     now = {r["engine"]: r for r in smoke_rows}
-    names = [n for n in now if n.startswith("lab_sweep") and n in ref]
+    names = [n for n in now if n.startswith(prefix) and n in ref]
     if not names:
-        print(f"# no comparable smoke_reference sweep row in "
+        print(f"# no comparable {section} sweep row in "
               f"{baseline_path}; nothing to check")
         return 0
     failed = False
     for name in names:
-        ref_ratio = ref[name]["speedup_vs_python_loop"]
-        now_ratio = now[name]["speedup_vs_python_loop"]
+        ref_ratio = ref[name][ratio_key]
+        now_ratio = now[name][ratio_key]
         floor = ref_ratio * (1.0 - max_regress)
         ok = now_ratio >= floor
         failed |= not ok
-        print(f"# {name} speedup vs python_loop: now {now_ratio:.2f}x, "
+        print(f"# {name} {ratio_key}: now {now_ratio:.2f}x, "
               f"baseline {ref_ratio:.2f}x, floor {floor:.2f}x -> "
               f"{'OK' if ok else 'REGRESSION'}")
     return 1 if failed else 0
@@ -293,7 +412,14 @@ def main() -> int:
     ap.add_argument("--check-baseline", default=None, metavar="PATH",
                     help="compare smoke speedups against this checked-in "
                          "artifact; non-zero exit on regression")
+    ap.add_argument("--check-pallas-baseline", default=None, metavar="PATH",
+                    help="ratio-of-ratios gate for the pallas rows against "
+                         "this artifact's smoke_reference_pallas section")
     ap.add_argument("--max-regress", type=float, default=0.2)
+    ap.add_argument("--engine", choices=("xla", "pallas", "both"),
+                    default="xla",
+                    help="which sweep engines to bench; pallas/both adds "
+                         "the PallasSweep rows and the 10x halving gate")
     args = ap.parse_args()
 
     from repro.analysis.runtime import (excess_traces, reset_trace_counts,
@@ -310,14 +436,21 @@ def main() -> int:
     print_rows("smoke shape "
                f"({SMOKE_SHAPE['n_nodes']}x{SMOKE_SHAPE['n_intervals']})",
                smoke_rows)
+    pallas_rows = []
+    if args.engine in ("pallas", "both"):
+        pallas_rows = bench_pallas(xla_rows=smoke_rows, **SMOKE_SHAPE)
+        print_rows("PallasSweep smoke rows", pallas_rows)
 
     if args.smoke:
+        status = 0
         # PR 3's time-to-best claim as a checked invariant: every
         # (chunk, horizon) shape the smoke rows dispatched must map to
-        # exactly one compiled executable (PlaneCheck recompile counter).
+        # exactly one compiled executable (PlaneCheck recompile
+        # counter).  The "lab.sweep." prefix covers both engines'
+        # dispatch keys (chunk loop + pallas specializations).
         if sanitizers_enabled():
-            counts = trace_counts("lab.sweep.chunk")
-            excess = excess_traces("lab.sweep.chunk")
+            counts = trace_counts("lab.sweep.")
+            excess = excess_traces("lab.sweep.")
             print(f"\nrecompile counter: "
                   f"{counts or '(no jitted sweeps ran)'}")
             if excess:
@@ -328,14 +461,24 @@ def main() -> int:
             # instead of printing a vacuously-empty counter.
             print("\nrecompile gate skipped (PLANECHECK_SANITIZERS "
                   "explicitly disabled)")
+        if pallas_rows:
+            status |= check_tenx_gate(pallas_rows)
         if args.out:
+            doc = {"smoke_reference": smoke_rows}
+            if pallas_rows:
+                doc["smoke_reference_pallas"] = pallas_rows
             with open(args.out, "w") as fh:
-                json.dump({"smoke_reference": smoke_rows}, fh, indent=2)
+                json.dump(doc, fh, indent=2)
             print(f"\nwrote {args.out}")
         if args.check_baseline:
-            return check_baseline(smoke_rows, args.check_baseline,
-                                  args.max_regress)
-        return 0
+            status |= check_baseline(smoke_rows, args.check_baseline,
+                                     args.max_regress)
+        if args.check_pallas_baseline and pallas_rows:
+            status |= check_baseline(
+                pallas_rows, args.check_pallas_baseline, args.max_regress,
+                section="smoke_reference_pallas", prefix="pallas",
+                ratio_key="speedup_vs_xla")
+        return status
 
     rows = bench_engines(args.nodes, args.intervals, args.configs)
     chunk_rows = bench_chunks(args.nodes, args.intervals, args.configs)
@@ -353,15 +496,19 @@ def main() -> int:
         json.dump({"sweep_throughput": rows,
                    "smoke_reference": smoke_rows}, fh, indent=2)
     sweep_out = args.sweep_out or os.path.join(root, "BENCH_sweep.json")
+    sweep_doc = {"chunked_throughput": chunk_rows,
+                 "device_scaling": scaling_rows,
+                 "time_to_best": ttb_rows}
+    if pallas_rows:
+        sweep_doc["smoke_reference_pallas"] = pallas_rows
     with open(sweep_out, "w") as fh:
-        json.dump({"chunked_throughput": chunk_rows,
-                   "device_scaling": scaling_rows,
-                   "time_to_best": ttb_rows}, fh, indent=2)
+        json.dump(sweep_doc, fh, indent=2)
     print(f"\nwrote {out}\nwrote {sweep_out}")
+    status = check_tenx_gate(pallas_rows) if pallas_rows else 0
     if args.check_baseline:
-        return check_baseline(smoke_rows, args.check_baseline,
-                              args.max_regress)
-    return 0
+        status |= check_baseline(smoke_rows, args.check_baseline,
+                                 args.max_regress)
+    return status
 
 
 if __name__ == "__main__":

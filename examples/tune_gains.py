@@ -18,6 +18,9 @@ live ``MemoryPlane`` and replays a burst through it.
         # preset-drift gate: regenerate every LAB_TUNED preset on its
         # tuning grid and exit 1 with a diff if configs/dynims.py is
         # stale relative to the tuning code (CI runs this)
+    PYTHONPATH=src python examples/tune_gains.py --engine pallas ...
+        # any of the above on PR 9's fused PallasSweep engine; presets
+        # must regenerate identically on either engine
 """
 
 import argparse
@@ -32,14 +35,14 @@ from repro.lab import (OBJECTIVES, get_scenario, list_scenarios, tune_gains,
 
 
 def tune_one(name: str, budget: int, method: str = "grid",
-             objective: str = "default"):
+             objective: str = "default", engine: str = "xla"):
     spec = get_scenario(name)
     print(f"== {name}: {spec.description or spec.family}")
     print(f"   fleet={spec.n_nodes} nodes x {spec.n_intervals} intervals, "
           f"~{budget}+1 gain candidates, method={method}, "
-          f"objective={objective}")
+          f"objective={objective}, engine={engine}")
     result = tune_gains(name, budget=budget, method=method,
-                        score_fn=objective)
+                        objective=objective, engine=engine)
     if result.rounds:
         sched = " -> ".join(f"{r['n_candidates']}@T={r['horizon']}"
                             for r in result.rounds)
@@ -77,7 +80,7 @@ _GAIN_FIELDS = ("r0", "lam", "lam_grant", "u_min", "u_max", "deadband",
                 "feedforward")
 
 
-def check_presets(budget: int) -> int:
+def check_presets(budget: int, engine: str = "xla") -> int:
     """Preset-drift gate: are the checked-in LAB_TUNED presets what the
     tuning code produces today?
 
@@ -85,12 +88,15 @@ def check_presets(budget: int) -> int:
     grid the presets were derived from) under its recorded objective
     and diffs the winner against ``configs/dynims.py``.  A nonzero
     exit means the presets are stale -- rerun ``--all`` and commit the
-    new values (with the finding that changed them).
+    new values (with the finding that changed them).  ``engine=
+    "pallas"`` must reproduce the same presets byte for byte (the
+    grid's final ranking is computed host-side either way).
     """
     stale = []
     for name in tuned_scenarios():
         objective = LAB_TUNED_OBJECTIVES.get(name, "default")
-        result = tune_gains(name, budget=budget, score_fn=objective)
+        result = tune_gains(name, budget=budget, objective=objective,
+                            engine=engine)
         preset = LAB_TUNED[name]
         diffs = [(f, getattr(preset, f), getattr(result.params, f))
                  for f in _GAIN_FIELDS
@@ -136,13 +142,17 @@ def main() -> None:
     ap.add_argument("--portfolio", nargs="+", metavar="SCENARIO",
                     help="worst-case tune one gain set across these "
                          "scenarios instead of single-scenario tuning")
+    ap.add_argument("--engine", default="xla", choices=("xla", "pallas"),
+                    help="sweep engine: the default XLA scan or PR 9's "
+                         "fused PallasSweep kernel")
     args = ap.parse_args()
 
     if args.check_presets:
-        sys.exit(check_presets(args.budget))
+        sys.exit(check_presets(args.budget, args.engine))
     if args.portfolio:
         result = tune_portfolio(args.portfolio, budget=args.budget,
-                                aggregate="worst", score_fn=args.objective)
+                                aggregate="worst", objective=args.objective,
+                                engine=args.engine)
         print(f"== portfolio (worst-case over {', '.join(args.portfolio)})")
         for name, s in result.scenario_scores.items():
             print(f"   {name}: winner scores {s:.3f}")
@@ -154,7 +164,8 @@ def main() -> None:
     if args.all:
         for name in tuned_scenarios():
             objective = LAB_TUNED_OBJECTIVES.get(name, "default")
-            r = tune_one(name, args.budget, args.method, objective)
+            r = tune_one(name, args.budget, args.method, objective,
+                         args.engine)
             knobs = [f"r0={r.params.r0:.4f}", f"lam={r.params.lam:.4f}"]
             if r.params.lam_grant is not None:
                 knobs.append(f"lam_grant={r.params.lam_grant:.4f}")
@@ -166,7 +177,7 @@ def main() -> None:
                   f"{', '.join(knobs)})\n")
         return
     result = tune_one(args.scenario, args.budget, args.method,
-                      args.objective)
+                      args.objective, args.engine)
     deploy(result)
 
 

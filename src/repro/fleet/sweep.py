@@ -44,7 +44,9 @@ from ..core.traces import GiB
 from ..lab.score import (FleetStats, OVER_R0_EPS, SETTLE_TOL,
                          compute_fleet_stats, finalize_fleet_stats,
                          kahan_add, quantile_from_codes, utilization_codes)
-from ..lab.sweep import GainSet, _shard_map, resolve_devices
+from ..lab._compat import warn_once
+from ..lab.sweep import (GainSet, _resolve_engine, _shard_map,
+                         resolve_devices)
 from .arbiter import MIN_TENANT_BUDGET, arbitrate, arbitrate_reference
 from .specs import FleetSpec
 
@@ -291,6 +293,8 @@ def fleet_sweep_demand(
     chunk: Optional[int] = None,
     devices: Union[None, int, Sequence] = None,
     node_shards: int = 1,
+    horizon: Optional[int] = None,
+    engine: str = "xla",
 ) -> Tuple[FleetStats, FleetExtras]:
     """Sweep a ``(K, N, T)`` per-tenant demand tensor over every gain.
 
@@ -302,12 +306,27 @@ def fleet_sweep_demand(
     :class:`~repro.lab.score.FleetStats` over the *fleet-level* closed
     loop plus :class:`FleetExtras` with the arbitration invariants.
 
+    The unified sweep kwargs apply here too: ``horizon`` truncates to
+    the first ``horizon`` intervals (still a whole number of epochs),
+    and ``engine`` is accepted for API uniformity -- the fleet carry is
+    not kernelized yet, so ``engine="pallas"`` falls back to the XLA
+    path with a one-time warning.
+
     Sharding matches the lab engine: gains across devices, optionally
     nodes too (``node_shards``), single device bit-exact.
     """
+    if _resolve_engine(engine, "fleet_sweep_demand") == "pallas":
+        warn_once("fleet_sweep_demand:pallas",
+                  "fleet_sweep_demand(engine='pallas'): the two-level "
+                  "fleet carry is not kernelized yet; falling back to "
+                  "the XLA engine", RuntimeWarning)
     demand = np.asarray(demand)
     if demand.ndim != 3:
         raise ValueError("demand must be (tenants, nodes, intervals)")
+    if horizon is not None:
+        if not 1 <= horizon <= demand.shape[2]:
+            raise ValueError(f"horizon must be in [1, {demand.shape[2]}]")
+        demand = demand[:, :, :horizon]
     k, n_nodes, n_steps = demand.shape
     if epoch_intervals < 1 or n_steps % epoch_intervals:
         raise ValueError(
@@ -483,11 +502,13 @@ def fleet_reference(
 def run_fleet_sweep(scenario, gains: GainSet, *, seed: int = 0,
                     chunk: Optional[int] = None,
                     devices: Union[None, int, Sequence] = None,
-                    node_shards: int = 1) -> Tuple[FleetStats, FleetExtras]:
+                    node_shards: int = 1, horizon: Optional[int] = None,
+                    engine: str = "xla") -> Tuple[FleetStats, FleetExtras]:
     """Sweep a registered (or inline) :class:`FleetScenario`.
 
     Resolves the scenario's per-tenant demand tensor and arbitration
-    shape and hands them to :func:`fleet_sweep_demand`.
+    shape and hands them to :func:`fleet_sweep_demand`; ``horizon`` /
+    ``engine`` pass through (the unified sweep kwarg set).
     """
     from .scenario import get_fleet_scenario
     fs = get_fleet_scenario(scenario)
@@ -497,4 +518,5 @@ def run_fleet_sweep(scenario, gains: GainSet, *, seed: int = 0,
         weights=fs.weights(), floors=fs.floors_bytes(),
         policy=fs.policy, priority_order=fs.priority_order(),
         epoch_intervals=fs.epoch_intervals, interval_s=fs.interval_s,
-        chunk=chunk, devices=devices, node_shards=node_shards)
+        chunk=chunk, devices=devices, node_shards=node_shards,
+        horizon=horizon, engine=engine)

@@ -29,6 +29,18 @@ program:
   re-tune on the replayed workload in the background, hot-swap the
   winner into the running plane.
 
+Since PR 9 the sweep surface is **engine-selectable**: every sweep
+entry point (:func:`sweep_demand`, :func:`run_sweep`,
+``repro.fleet.fleet_sweep_demand``) and every tuner
+(:func:`tune_gains`, :func:`halving_tune`, :func:`tune_portfolio`,
+:func:`retune_online`) takes ``engine="xla" | "pallas"`` plus the
+shared kwarg set ``horizon`` / ``devices`` / ``node_shards`` /
+``chunk`` / ``objective``.  ``engine="pallas"`` routes to
+:mod:`.pallas_sweep` -- the fused kernel with in-scan successive
+halving.  Renamed spellings (``DEFAULT_CHUNK``, ``tune.ScoreFn``, the
+tuners' ``score_fn=``) keep working through warn-once deprecation
+shims (:mod:`._compat` documents the mapping).
+
 Tuned presets surface through ``repro.configs.dynims.tuned_params`` and
 ``MemoryPlane.for_scenario``.
 """
@@ -40,21 +52,24 @@ from .score import (FleetStats, OVER_R0_EPS, QUANT_BINS, QUANT_LEVELS,
                     compute_fleet_stats, default_score, finalize_fleet_stats,
                     hpl_slowdown_curve, kahan_add, quantile_from_codes,
                     runtime_score, stats_to_dict, utilization_codes)
-from .sweep import (CODES_BUDGET_BYTES, DEFAULT_CHUNK, GainSet, SweepPlan,
-                    SweepResult, paper_law_mask, plan_specialization,
-                    resolve_devices, run_sweep, sweep_demand)
-from .tune import (OBJECTIVES, PortfolioResult, RetuneHandle, RetuneResult,
-                   TuneResult, grid_gains, halving_tune, random_gains,
-                   resolve_objective, retune_online, tune_gains,
-                   tune_portfolio)
+from .sweep import (CODES_BUDGET_BYTES, ENGINES, GainSet, SweepPlan,
+                    SweepResult, XLA_DEFAULT_CHUNK, paper_law_mask,
+                    plan_specialization, resolve_devices, run_sweep,
+                    sweep_demand)
+from .tune import (OBJECTIVES, Objective, PortfolioResult, RetuneHandle,
+                   RetuneResult, TuneResult, grid_gains, halving_tune,
+                   random_gains, resolve_objective, retune_online,
+                   tune_gains, tune_portfolio)
 
 __all__ = [
-    "CODES_BUDGET_BYTES", "CacheSpec", "DEFAULT_CHUNK", "FleetStats",
-    "GainSet", "OBJECTIVES", "OVER_R0_EPS", "PortfolioResult", "QUANT_BINS",
+    "CODES_BUDGET_BYTES", "CacheSpec", "ENGINES", "FleetStats",
+    "GainSet", "OBJECTIVES", "OVER_R0_EPS", "Objective",
+    "PortfolioResult", "QUANT_BINS",
     "QUANT_LEVELS", "QUANT_RANGE", "RUNTIME_WEIGHT", "SETTLE_TOL",
     "ReplayTrace", "RetuneHandle", "RetuneResult", "ScenarioSpec",
     "SweepPlan", "SweepResult", "TRACE_FAMILIES",
-    "TuneResult", "compute_fleet_stats", "default_score",
+    "TuneResult", "XLA_DEFAULT_CHUNK", "compute_fleet_stats",
+    "default_score",
     "finalize_fleet_stats", "get_scenario", "grid_gains", "halving_tune",
     "hpl_slowdown_curve", "kahan_add", "list_scenarios", "paper_law_mask",
     "plan_specialization", "quantile_from_codes", "random_gains",
@@ -62,3 +77,14 @@ __all__ = [
     "retune_online", "run_sweep", "runtime_score", "stats_to_dict",
     "sweep_demand", "tune_gains", "tune_portfolio", "utilization_codes",
 ]
+
+
+def __getattr__(name: str):
+    if name == "DEFAULT_CHUNK":
+        from ._compat import warn_once
+        warn_once("lab:DEFAULT_CHUNK",
+                  "repro.lab.DEFAULT_CHUNK was renamed to "
+                  "XLA_DEFAULT_CHUNK in the PR-9 engine unification; "
+                  "the old name will go away")
+        return XLA_DEFAULT_CHUNK
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,52 @@
+"""Warn-once helpers for the unified sweep API's deprecation shims.
+
+The PR-9 API redesign renamed a handful of kwargs and module constants
+(``score_fn`` -> ``objective``, ``DEFAULT_CHUNK`` -> ``XLA_DEFAULT_CHUNK``,
+``ScoreFn`` -> ``Objective``); every old spelling keeps working through a
+shim that warns exactly once per process per call site key, so a sweep
+inside a tuning loop does not flood stderr.  The registry is process
+global -- tests that assert on the warning call :func:`reset_warnings`
+first.
+
+Kwarg mapping (old -> new):
+
+========================  =========================  ====================
+old spelling              new spelling               where
+========================  =========================  ====================
+``score_fn=``             ``objective=``             ``tune_gains`` /
+                                                     ``halving_tune`` /
+                                                     ``tune_portfolio`` /
+                                                     ``retune_online``
+``lab.DEFAULT_CHUNK``     ``lab.XLA_DEFAULT_CHUNK``  ``repro.lab`` /
+                                                     ``repro.lab.sweep``
+``lab.tune.ScoreFn``      ``lab.tune.Objective``     type alias
+========================  =========================  ====================
+"""
+
+from __future__ import annotations
+
+import threading
+import warnings
+
+_WARNED: set = set()
+_LOCK = threading.Lock()
+
+
+def warn_once(key: str, message: str, category=DeprecationWarning,
+              stacklevel: int = 3) -> bool:
+    """Emit ``message`` the first time ``key`` is seen; no-op after.
+
+    Returns True when the warning actually fired (tests use it).
+    """
+    with _LOCK:
+        if key in _WARNED:
+            return False
+        _WARNED.add(key)
+    warnings.warn(message, category, stacklevel=stacklevel)
+    return True
+
+
+def reset_warnings() -> None:
+    """Forget every warned key (test isolation only)."""
+    with _LOCK:
+        _WARNED.clear()

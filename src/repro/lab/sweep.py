@@ -59,6 +59,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from ..analysis.runtime import (dispatch_guard, record_trace,
                                 sanitizers_enabled)
+from ._compat import warn_once
 
 try:                                    # jax >= 0.5 exposes it at top level
     _shard_map = jax.shard_map
@@ -75,8 +76,20 @@ from .score import (FleetStats, OVER_R0_EPS, SETTLE_TOL, default_score,
 
 # Upper bound on gains per compiled chunk; the auto-chunk logic lowers
 # it when the per-gain uint16 code history would blow the budget.
-DEFAULT_CHUNK = 32
+# (Named for the engine it belongs to since PR 9 -- the pallas engine
+# tiles lanes by pallas_sweep.TILE_GAINS instead.  The old spelling
+# ``DEFAULT_CHUNK`` still resolves through a module __getattr__ shim.)
+XLA_DEFAULT_CHUNK = 32
 CODES_BUDGET_BYTES = 256 << 20
+
+ENGINES = ("xla", "pallas")
+
+
+def _resolve_engine(engine: str, who: str) -> str:
+    if engine not in ENGINES:
+        raise ValueError(f"{who}: unknown engine {engine!r}; "
+                         f"expected one of {ENGINES}")
+    return engine
 
 
 # ---------------------------------------------------------------------------
@@ -506,7 +519,7 @@ def _resolve_chunk(chunk: Optional[int], n_gains: int, n_steps: int,
     if chunk is None:
         per_gain = max(n_steps * n_nodes * 2, 1)       # uint16 codes
         chunk = min(max(int(CODES_BUDGET_BYTES // per_gain), 1),
-                    DEFAULT_CHUNK)
+                    XLA_DEFAULT_CHUNK)
     chunk = max(int(chunk), 1)
     chunk = min(chunk, max(n_gains, 1))
     # round up so every device holds the same number of gain points
@@ -566,12 +579,23 @@ def sweep_demand(
     devices: Union[None, int, Sequence] = None,
     cache: Optional[CacheSpec] = None,
     node_shards: int = 1,
+    horizon: Optional[int] = None,
+    engine: str = "xla",
 ) -> FleetStats:
     """Sweep a raw ``(N, T)`` demand matrix over every gain point.
 
     The low-level entry: :func:`run_sweep` compiles a scenario down to
     this, and ``cluster_sim.simulate_fleet`` feeds it the historical
     fleet workload directly.  Returns ``(G,)``-field stats as numpy.
+
+    ``engine`` selects the backend: ``"xla"`` (this module's scan+vmap
+    engine) or ``"pallas"`` (the fused kernel in
+    :mod:`~repro.lab.pallas_sweep`, parity-pinned to this one; pass
+    pallas-only knobs like ``precision=`` by calling
+    :func:`~repro.lab.pallas_sweep.pallas_sweep_demand` directly).
+    ``horizon`` truncates the loop to the first ``horizon`` intervals
+    -- the same knob every sweep entry point takes since the PR-9 API
+    unification.
 
     Every chunk is dispatched before any result is collected, so on an
     asynchronous backend chunk k+1 computes while chunk k's (G,)-scalar
@@ -587,12 +611,22 @@ def sweep_demand(
     paper-faithful and beyond-paper points is partitioned by law class
     so each class runs its own specialized executable.
     """
+    if _resolve_engine(engine, "sweep_demand") == "pallas":
+        from .pallas_sweep import pallas_sweep_demand
+        return pallas_sweep_demand(
+            demand, gains, node_memory=node_memory, interval_s=interval_s,
+            occupancy=occupancy, chunk=chunk, devices=devices, cache=cache,
+            node_shards=node_shards, horizon=horizon)
     demand = np.asarray(demand)
     if cache is not None and float(occupancy) != 1.0:
         raise ValueError("cache modeling replaces the occupancy "
                          "abstraction; need occupancy == 1.0")
     if node_shards < 1:
         raise ValueError("node_shards must be >= 1")
+    if horizon is not None:
+        if not 1 <= horizon <= demand.shape[1]:
+            raise ValueError(f"horizon must be in [1, {demand.shape[1]}]")
+        demand = demand[:, :horizon]
     mask = paper_law_mask(gains)
     if mask.any() and not mask.all():
         # Mixed law classes: dispatch each class at its own
@@ -686,6 +720,7 @@ class SweepResult:
     stats: FleetStats                 # (G,) numpy fields
     seed: int
     elapsed_s: float
+    objective: Optional[object] = None  # score fn the sweep was run under
 
     @property
     def n_configs(self) -> int:
@@ -698,13 +733,20 @@ class SweepResult:
                 * self.n_configs)
         return work / self.elapsed_s if self.elapsed_s > 0 else float("inf")
 
-    def scores(self, score_fn=default_score) -> np.ndarray:
-        return np.asarray(score_fn(self.stats))
+    def _score_fn(self, score_fn):
+        if score_fn is not None:
+            return score_fn
+        return self.objective if self.objective is not None \
+            else default_score
 
-    def best(self, score_fn=default_score) -> int:
+    def scores(self, score_fn=None) -> np.ndarray:
+        """Score every gain point; defaults to the stored objective."""
+        return np.asarray(self._score_fn(score_fn)(self.stats))
+
+    def best(self, score_fn=None) -> int:
         return int(np.argmax(self.scores(score_fn)))
 
-    def top(self, k: int = 5, score_fn=default_score) -> Sequence[int]:
+    def top(self, k: int = 5, score_fn=None) -> Sequence[int]:
         s = self.scores(score_fn)
         return list(np.argsort(-s)[:k])
 
@@ -719,6 +761,8 @@ def run_sweep(
     devices: Union[None, int, Sequence] = None,
     horizon: Optional[int] = None,
     node_shards: int = 1,
+    engine: str = "xla",
+    objective=None,
 ) -> SweepResult:
     """Compile ``scenario`` and run its closed loop over every gain.
 
@@ -728,8 +772,15 @@ def run_sweep(
     ``horizon`` intervals -- the successive-halving tuner scores cheap
     prefix rounds with it while reusing the same demand compilation.
     ``node_shards`` splits the node axis across devices (2-D mesh; see
-    :func:`sweep_demand`).
+    :func:`sweep_demand`).  ``engine`` selects the sweep backend
+    (``"xla"`` | ``"pallas"``); ``objective`` (a registry name or
+    ``FleetStats -> scores`` callable) is stored on the result so
+    ``result.scores()`` / ``result.best()`` default to it.
     """
+    _resolve_engine(engine, "run_sweep")
+    if objective is not None:
+        from .tune import resolve_objective
+        objective = resolve_objective(objective)
     spec = get_scenario(scenario)
     demand = spec.build_demand(seed=seed)
     if horizon is not None:
@@ -743,7 +794,17 @@ def run_sweep(
     stats = sweep_demand(
         demand, gains, node_memory=m, interval_s=spec.interval_s,
         occupancy=spec.occupancy, chunk=chunk, devices=devices,
-        cache=spec.cache, node_shards=node_shards)
+        cache=spec.cache, node_shards=node_shards, engine=engine)
     elapsed = time.perf_counter() - t0
     return SweepResult(scenario=spec, gains=gains, stats=stats, seed=seed,
-                       elapsed_s=elapsed)
+                       elapsed_s=elapsed, objective=objective)
+
+
+def __getattr__(name: str):
+    if name == "DEFAULT_CHUNK":
+        warn_once("sweep:DEFAULT_CHUNK",
+                  "repro.lab.sweep.DEFAULT_CHUNK was renamed to "
+                  "XLA_DEFAULT_CHUNK in the PR-9 engine unification; "
+                  "the old name will go away")
+        return XLA_DEFAULT_CHUNK
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -48,31 +48,52 @@ import numpy as np
 
 from ..configs.dynims import PAPER_TABLE_I
 from ..core.control import ControllerParams
+from ._compat import warn_once
 from .scenarios import ScenarioSpec, get_scenario
 from .score import FleetStats, default_score, runtime_score, stats_to_dict
 from .sweep import GainSet, SweepResult, run_sweep
 
-ScoreFn = Callable[[FleetStats], np.ndarray]
+# The canonical name since the PR-9 API unification; the old spelling
+# ``ScoreFn`` still resolves through the module __getattr__ shim below.
+Objective = Callable[[FleetStats], np.ndarray]
 
-# Named objectives accepted anywhere a score_fn goes: ``"default"`` is
-# the stability/yield trade (``lab.score.default_score``);
+# Named objectives accepted anywhere an objective goes: ``"default"``
+# is the stability/yield trade (``lab.score.default_score``);
 # ``"runtime"`` optimizes modeled app runtime on CacheLoop scenarios
 # (``lab.score.runtime_score``).
-OBJECTIVES: Dict[str, ScoreFn] = {
+OBJECTIVES: Dict[str, Objective] = {
     "default": default_score,
     "runtime": runtime_score,
 }
 
 
-def resolve_objective(score_fn: Union[str, ScoreFn]) -> ScoreFn:
+def resolve_objective(objective: Union[str, Objective]) -> Objective:
     """Accept a named objective or any ``FleetStats -> (G,)`` callable."""
-    if callable(score_fn):
-        return score_fn
+    if callable(objective):
+        return objective
     try:
-        return OBJECTIVES[score_fn]
+        return OBJECTIVES[objective]
     except KeyError:
-        raise ValueError(f"unknown objective {score_fn!r}; named "
+        raise ValueError(f"unknown objective {objective!r}; named "
                          f"objectives: {sorted(OBJECTIVES)}") from None
+
+
+# Sentinel distinguishing "caller passed the deprecated score_fn="
+# from "caller passed nothing".
+_UNSET = object()
+
+
+def _objective_kwarg(objective, score_fn, who: str) -> Objective:
+    """Merge the new ``objective=`` with the deprecated ``score_fn=``."""
+    if score_fn is not _UNSET:
+        warn_once(f"{who}:score_fn",
+                  f"{who}(score_fn=...) was renamed to objective=... in "
+                  "the PR-9 API unification; the old kwarg still routes "
+                  "but will go away")
+        if objective is None:
+            objective = score_fn
+    return resolve_objective(objective if objective is not None
+                             else default_score)
 
 
 def grid_gains(
@@ -141,8 +162,9 @@ class TuneResult:
     # halving only: per-round records {horizon, n_candidates, elapsed_s}
     rounds: Optional[List[dict]] = None
     # the objective the search ranked with; summary() reuses it so the
-    # leaderboard matches the returned winner under custom objectives
-    score_fn: ScoreFn = default_score
+    # leaderboard matches the returned winner under custom objectives.
+    # (The field keeps its historical name -- it is data, not a kwarg.)
+    score_fn: Objective = default_score
 
     @property
     def improvement(self) -> float:
@@ -205,9 +227,12 @@ def tune_gains(
     method: str = "grid",
     budget: int = 64,
     seed: int = 0,
-    score_fn: Union[str, ScoreFn] = default_score,
+    objective: Union[None, str, Objective] = None,
     chunk: Optional[int] = None,
     devices=None,
+    node_shards: int = 1,
+    engine: str = "xla",
+    score_fn=_UNSET,
 ) -> TuneResult:
     """Search gains for ``scenario`` and return the winner.
 
@@ -218,24 +243,28 @@ def tune_gains(
     the real count), ``"random"`` (exactly ``budget`` points), or
     ``"halving"`` (successive halving via :func:`halving_tune`); pass
     an explicit ``gains`` set to bring your own candidates.
-    ``score_fn`` takes a callable or a named objective (``"default"`` /
-    ``"runtime"`` -- the latter optimizes CacheLoop's modeled app
-    runtime).  The baseline (``base_params``, default paper Table I) is
-    always scored on the full horizon alongside the candidates, so the
-    returned score never falls below it.
+    ``objective`` takes a callable or a named objective (``"default"``
+    / ``"runtime"`` -- the latter optimizes CacheLoop's modeled app
+    runtime); the pre-PR-9 spelling ``score_fn=`` still routes with a
+    one-time deprecation warning.  ``engine`` selects the sweep backend
+    (``"xla"`` | ``"pallas"``).  The baseline (``base_params``, default
+    paper Table I) is always scored on the full horizon alongside the
+    candidates, so the returned score never falls below it.
     """
-    score_fn = resolve_objective(score_fn)
+    objective = _objective_kwarg(objective, score_fn, "tune_gains")
     base = base_params or PAPER_TABLE_I
     if method == "halving":
         return halving_tune(scenario, base_params=base, gains=gains,
-                            budget=budget, seed=seed, score_fn=score_fn,
-                            chunk=chunk, devices=devices)
+                            budget=budget, seed=seed, objective=objective,
+                            chunk=chunk, devices=devices,
+                            node_shards=node_shards, engine=engine)
     if gains is None:
         gains = _default_candidates(method, budget, base, seed)
     candidates = gains.concat(GainSet.from_params(base))
     result = run_sweep(scenario, candidates, seed=seed, chunk=chunk,
-                       devices=devices)
-    scores = result.scores(score_fn)
+                       devices=devices, node_shards=node_shards,
+                       engine=engine, objective=objective)
+    scores = result.scores(objective)
     best = int(np.argmax(scores))
     baseline_score = float(scores[-1])          # base appended last
     return TuneResult(
@@ -245,7 +274,7 @@ def tune_gains(
         baseline_score=baseline_score,
         index=best,
         sweep=result,
-        score_fn=score_fn,
+        score_fn=objective,
     )
 
 
@@ -259,9 +288,12 @@ def halving_tune(
     keep: float = 0.25,
     min_survivors: int = 4,
     seed: int = 0,
-    score_fn: Union[str, ScoreFn] = default_score,
+    objective: Union[None, str, Objective] = None,
     chunk: Optional[int] = None,
     devices=None,
+    node_shards: int = 1,
+    engine: str = "xla",
+    score_fn=_UNSET,
 ) -> TuneResult:
     """Successive-halving gain search: cheap prefix rounds, full finals.
 
@@ -276,15 +308,26 @@ def halving_tune(
     scored there so the guarantee "never below baseline" holds on the
     full horizon.
 
-    Each round reuses the sweep engine's shape-specialized executable
-    for its (chunk, horizon) pair, so repeated tuning runs amortize
-    compilation across scenarios with matching horizons.
+    ``engine="xla"`` (default) runs the halving loop host-side: each
+    round is a from-scratch truncated sweep, and rounds reuse the sweep
+    engine's shape-specialized executable for their (chunk, horizon)
+    pair.  ``engine="pallas"`` moves the whole schedule *in-scan*
+    (:func:`~repro.lab.pallas_sweep.halving_sweep`): one device program
+    pauses at each horizon, scores and compacts the survivor lanes on
+    device, and never re-simulates the prefix -- same survivors (the
+    lanes are deterministic, so prefix accumulators equal a truncated
+    from-scratch run), a fraction of the dispatches and the work.
     """
-    score_fn = resolve_objective(score_fn)
+    objective = _objective_kwarg(objective, score_fn, "halving_tune")
     spec = get_scenario(scenario)
     base = base_params or PAPER_TABLE_I
     if gains is None:
         gains = _default_candidates("grid", budget, base, seed)
+    if engine == "pallas":
+        return _halving_tune_pallas(
+            spec, base, gains, rounds=rounds, keep=keep,
+            min_survivors=min_survivors, seed=seed, objective=objective,
+            chunk=chunk, devices=devices, node_shards=node_shards)
     fracs = sorted(set(float(f) for f in rounds))
     if not fracs or fracs[0] <= 0.0 or fracs[-1] > 1.0:
         raise ValueError("rounds must be fractions in (0, 1]")
@@ -299,9 +342,10 @@ def halving_tune(
         if final:
             survivors = survivors.concat(GainSet.from_params(base))
         result = run_sweep(spec, survivors, seed=seed, chunk=chunk,
-                           devices=devices,
+                           devices=devices, node_shards=node_shards,
+                           engine=engine, objective=objective,
                            horizon=None if frac == 1.0 else horizon)
-        scores = result.scores(score_fn)
+        scores = result.scores(objective)
         round_log.append({"horizon": horizon,
                           "n_candidates": len(survivors),
                           "elapsed_s": result.elapsed_s})
@@ -315,12 +359,57 @@ def halving_tune(
                 index=best,
                 sweep=result,
                 rounds=round_log,
-                score_fn=score_fn,
+                score_fn=objective,
             )
         n_keep = max(int(np.ceil(len(survivors) * keep)), min_survivors)
         n_keep = min(n_keep, len(survivors))
         survivors = survivors.take(np.argsort(-scores)[:n_keep])
     raise AssertionError("unreachable")
+
+
+def _halving_tune_pallas(spec: ScenarioSpec, base: ControllerParams,
+                         gains: GainSet, *, rounds, keep, min_survivors,
+                         seed, objective, chunk, devices,
+                         node_shards) -> TuneResult:
+    """``halving_tune(engine="pallas")``: the in-scan schedule, wrapped.
+
+    Builds the scenario exactly like :func:`run_sweep`, hands the
+    candidates + baseline to the single-dispatch
+    :func:`~repro.lab.pallas_sweep.halving_sweep`, and repacks its
+    final-round lanes into the standard :class:`TuneResult` --
+    ``result.sweep.gains`` holds the surviving candidates with the
+    baseline appended last, same as the host path's final round.
+    """
+    from .pallas_sweep import halving_sweep
+
+    demand = spec.build_demand(seed=seed)
+    m = spec.build_node_memory(seed=seed)
+    hs = halving_sweep(
+        demand, gains, GainSet.from_params(base), node_memory=m,
+        interval_s=spec.interval_s, occupancy=spec.occupancy,
+        cache=spec.cache, rounds=rounds, keep=keep,
+        min_survivors=min_survivors, objective=objective, chunk=chunk,
+        devices=devices, node_shards=node_shards)
+    survivors = gains.take(hs.survivor_idx).concat(
+        GainSet.from_params(base))
+    sweep = SweepResult(scenario=spec, gains=survivors, stats=hs.stats,
+                        seed=seed, elapsed_s=hs.elapsed_s,
+                        objective=objective)
+    # Final ranking recomputed host-side (float64 numpy over the final
+    # lanes' stats) so it matches the host tuner's arithmetic exactly;
+    # the in-scan rounds selected with the same objective in f32.
+    scores = sweep.scores(objective)
+    best = int(np.argmax(scores))
+    return TuneResult(
+        params=survivors.params_at(best, base),
+        score=float(scores[best]),
+        baseline_params=base,
+        baseline_score=float(scores[-1]),           # base appended last
+        index=best,
+        sweep=sweep,
+        rounds=hs.rounds,
+        score_fn=objective,
+    )
 
 
 @dataclasses.dataclass
@@ -350,21 +439,26 @@ def tune_portfolio(
     budget: int = 64,
     aggregate: str = "worst",
     seed: int = 0,
-    score_fn: Union[str, ScoreFn] = default_score,
+    objective: Union[None, str, Objective] = None,
     chunk: Optional[int] = None,
     devices=None,
+    node_shards: int = 1,
+    engine: str = "xla",
+    score_fn=_UNSET,
 ) -> PortfolioResult:
     """One gain set scored across a scenario portfolio.
 
     Sweeps the same candidates over every scenario and aggregates the
     (S, G) score matrix per gain point -- ``"worst"`` (min over
     scenarios: robust gains that degrade gracefully everywhere) or
-    ``"mean"``.  ``score_fn`` accepts the named objectives too
+    ``"mean"``.  ``objective`` accepts the named objectives too
     (``"runtime"`` portfolio-tunes modeled app runtime across CacheLoop
-    scenarios).  The baseline rides along, so the winner's aggregate
-    never falls below the paper defaults across the portfolio.
+    scenarios); ``score_fn=`` is the deprecated spelling.  ``engine``
+    selects the sweep backend per scenario.  The baseline rides along,
+    so the winner's aggregate never falls below the paper defaults
+    across the portfolio.
     """
-    score_fn = resolve_objective(score_fn)
+    objective = _objective_kwarg(objective, score_fn, "tune_portfolio")
     if not scenarios:
         raise ValueError("need at least one scenario")
     if aggregate not in ("worst", "mean"):
@@ -378,9 +472,10 @@ def tune_portfolio(
     for sc in scenarios:
         spec = get_scenario(sc)
         result = run_sweep(spec, candidates, seed=seed, chunk=chunk,
-                           devices=devices)
+                           devices=devices, node_shards=node_shards,
+                           engine=engine, objective=objective)
         sweeps[spec.name] = result
-        matrix.append(result.scores(score_fn))
+        matrix.append(result.scores(objective))
     matrix = np.stack(matrix)                       # (S, G)
     agg = matrix.min(axis=0) if aggregate == "worst" else matrix.mean(axis=0)
     best = int(np.argmax(agg))
@@ -480,7 +575,7 @@ def retune_online(
     name: str = "captured",
     method: str = "halving",
     budget: int = 32,
-    score_fn: Union[str, ScoreFn] = default_score,
+    objective: Union[None, str, Objective] = None,
     n_intervals: Optional[int] = None,
     n_nodes: Optional[int] = None,
     fit_cache: Optional[bool] = None,
@@ -490,8 +585,11 @@ def retune_online(
     seed: int = 0,
     chunk: Optional[int] = None,
     devices=None,
+    node_shards: int = 1,
+    engine: str = "xla",
     restarts: int = 0,
     restart_backoff_s: float = 0.05,
+    score_fn=_UNSET,
     **scenario_overrides,
 ) -> Union[RetuneResult, "RetuneHandle"]:
     """Re-tune a running ``MemoryPlane`` on its own captured workload.
@@ -499,8 +597,9 @@ def retune_online(
     The ReplayLoop in one call: snapshot the plane's recorded telemetry
     (``plane.capture()``, or pass an explicit ``capture``), fit it into
     a ``"replay"`` scenario, search gains on it with the sweep engine
-    (``method``/``budget``/``score_fn`` as in :func:`tune_gains`;
-    successive halving by default), and -- if the winner improves on
+    (``method``/``budget``/``objective``/``engine`` as in
+    :func:`tune_gains`; successive halving by default, ``score_fn=``
+    deprecated as everywhere), and -- if the winner improves on
     the *currently deployed* parameters by more than
     ``min_improvement`` -- hot-swap it into the plane via
     ``plane.swap_params`` (atomic, interval-boundary, epoch-stamped).
@@ -528,6 +627,7 @@ def retune_online(
     and, when the plane has a fault log, as ``retune-restart`` /
     ``retune-dead`` events.
     """
+    objective = _objective_kwarg(objective, score_fn, "retune_online")
     if restarts < 0:
         raise ValueError("restarts must be >= 0")
     if capture is None and restarts == 0:
@@ -545,8 +645,9 @@ def retune_online(
             cap, name=name, n_intervals=n_intervals, n_nodes=n_nodes,
             fit_cache=fit_cache, **scenario_overrides)
         tune = tune_gains(spec, base_params=deployed, method=method,
-                          budget=budget, seed=seed, score_fn=score_fn,
-                          chunk=chunk, devices=devices)
+                          budget=budget, seed=seed, objective=objective,
+                          chunk=chunk, devices=devices,
+                          node_shards=node_shards, engine=engine)
         swapped, epoch = False, None
         if swap and tune.improvement > min_improvement:
             epoch = plane.swap_params(tune.params)
@@ -585,3 +686,12 @@ def retune_online(
     thread.start()
     handle = RetuneHandle(thread, box, stats, stats_lock)
     return handle.result() if block else handle
+
+
+def __getattr__(name: str):
+    if name == "ScoreFn":
+        warn_once("tune:ScoreFn",
+                  "repro.lab.tune.ScoreFn was renamed to Objective in "
+                  "the PR-9 API unification; the old name will go away")
+        return Objective
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

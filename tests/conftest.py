@@ -18,10 +18,12 @@ import pytest
 
 from repro.analysis import runtime as pc_runtime
 
-# Only the sweep hot path is gated.  The ``plane.fused_step`` counter
-# is *not*: tests build many planes, and each ``make_fused_step`` call
+# Only the sweep hot path is gated -- both engines: the XLA chunk
+# loop ("lab.sweep.chunk") and the PallasSweep dispatch
+# ("lab.sweep.pallas").  The ``plane.fused_step`` counter is *not*:
+# tests build many planes, and each ``make_fused_step`` call
 # legitimately compiles its own instance at the same fleet size.
-_GATED_PREFIX = "lab.sweep.chunk"
+_GATED_PREFIX = "lab.sweep."
 
 
 @pytest.fixture
