@@ -1,0 +1,235 @@
+"""AppGraph makespan benchmarks: the paper's "up to 5X", emergent.
+
+Unlike the throughput benches (``lab_bench.py``, ``fleet_bench.py``)
+whose gates are timing ratios, the headline numbers here are
+**deterministic model outputs** -- end-to-end DAG makespans from the
+scanned sweep -- so CI compares them directly:
+
+* ``makespan_gap``    -- the ``spark-dag`` scenario under the static
+  25G Table-I baseline vs the dynamic Table-I controller.  The gate is
+  the paper's claim made emergent: the dynamic controller must finish
+  the DAG >= ``--min-gap`` (default 2x) faster, with **no** penalty
+  weight involved, and both makespans must match the checked-in
+  artifact within ``--drift`` (a model change must regenerate the
+  baseline deliberately).
+* ``limplock``        -- the ``limplock`` scenario with and without
+  its one 4x-degraded node: barrier coupling must inflate the *fleet*
+  makespan ~4x (gated to [3.5, 4.5]).
+* ``smoke_reference`` -- timing rows (informational, not gated): the
+  AppGraph carry's overhead over the identical sweep with
+  ``app_graph=None`` on a reduced spark-dag shape.
+
+Writes ``BENCH_appgraph.json`` at the repo root; ``--smoke`` runs the
+same deterministic gates plus the timing rows fast enough for CI.
+
+Usage:
+
+    PYTHONPATH=src python benchmarks/appgraph_bench.py
+    PYTHONPATH=src python benchmarks/appgraph_bench.py --smoke \
+        --check-baseline BENCH_appgraph.json     # CI gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+REPEATS = 3
+HARD_LIMPLOCK_BAND = (3.5, 4.5)
+
+
+def _best(fn) -> float:
+    fn()
+    times = []
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return min(times)
+
+
+def _static_gains(grant_gib: float = 25.0):
+    """The paper's static Table-I baseline: grant pinned, law inert."""
+    from repro.core.cluster_sim import paper_controller_params
+    from repro.core.traces import GiB
+    from repro.lab import GainSet
+    return GainSet.from_params(paper_controller_params(
+        lam=0.0, u_min=grant_gib * GiB, u_max=grant_gib * GiB))
+
+
+def measure_makespan_gap(seed: int = 0) -> list:
+    """spark-dag: static 25G vs dynamic Table-I, emergent makespans."""
+    from repro.configs.dynims import PAPER_TABLE_I
+    from repro.core.traces import GiB
+    from repro.lab import GainSet, get_scenario, sweep_demand
+
+    spec = get_scenario("spark-dag")
+    demand = np.asarray(spec.build_demand(seed=seed))
+    kw = dict(node_memory=125.0 * GiB, interval_s=spec.interval_s,
+              cache=spec.cache, app_graph=spec.app_graph)
+    static = float(sweep_demand(demand, _static_gains(), **kw).makespan[0])
+    dynamic = float(sweep_demand(
+        demand, GainSet.from_params(PAPER_TABLE_I), **kw).makespan[0])
+    return [
+        {"config": "static-25g", "scenario": "spark-dag", "seed": seed,
+         "makespan_s": static, "speedup_vs_static": 1.0},
+        {"config": "dynamic-table1", "scenario": "spark-dag", "seed": seed,
+         "makespan_s": dynamic, "speedup_vs_static": static / dynamic},
+    ]
+
+
+def measure_limplock(seed: int = 0) -> list:
+    """limplock: fleet makespan with/without the one 4x-degraded node."""
+    from repro.lab import get_scenario, run_sweep
+
+    spec = get_scenario("limplock")
+    healthy = spec.replace(app_graph=spec.app_graph.replace(
+        slow_nodes=(), slow_factor=1.0))
+    ok = float(run_sweep(healthy, _static_gains(), seed=seed)
+               .stats.makespan[0])
+    slow = float(run_sweep(spec, _static_gains(), seed=seed)
+                 .stats.makespan[0])
+    return [
+        {"config": "healthy", "scenario": "limplock", "seed": seed,
+         "makespan_s": ok, "inflation_vs_healthy": 1.0},
+        {"config": "one-4x-node", "scenario": "limplock", "seed": seed,
+         "makespan_s": slow, "inflation_vs_healthy": slow / ok},
+    ]
+
+
+def measure_overhead(seed: int = 0) -> list:
+    """Timing rows: the AppGraph carry vs app_graph=None, same sweep."""
+    from repro.core.cluster_sim import paper_controller_params
+    from repro.core.traces import GiB
+    from repro.lab import get_scenario, grid_gains, sweep_demand
+
+    spec = get_scenario("spark-dag").replace(n_nodes=8, n_intervals=600)
+    demand = np.asarray(spec.build_demand(seed=seed))
+    gains = grid_gains(paper_controller_params(),
+                       lam=np.linspace(0.2, 1.6, 3),
+                       r0=np.linspace(0.9, 0.97, 3))
+    kw = dict(node_memory=125.0 * GiB, interval_s=spec.interval_s,
+              cache=spec.cache)
+    t_plain = _best(lambda: sweep_demand(demand, gains, **kw))
+    t_graph = _best(lambda: sweep_demand(demand, gains,
+                                         app_graph=spec.app_graph, **kw))
+    work = len(gains) * demand.shape[0] * demand.shape[1]
+    rows = [
+        {"engine": "sweep_plain", "n_nodes": 8, "n_intervals": 600,
+         "n_configs": len(gains), "elapsed_s": t_plain,
+         "throughput_upd_per_s": work / t_plain},
+        {"engine": "sweep_appgraph", "n_nodes": 8, "n_intervals": 600,
+         "n_configs": len(gains), "elapsed_s": t_graph,
+         "throughput_upd_per_s": work / t_graph,
+         "overhead_vs_plain": t_graph / t_plain},
+    ]
+    return rows
+
+
+def check_gates(gap_rows: list, limp_rows: list, baseline_path: str,
+                min_gap: float, drift: float) -> int:
+    """The deterministic CI gates; nonzero on any failure."""
+    failed = False
+
+    speedup = gap_rows[1]["speedup_vs_static"]
+    ok = speedup >= min_gap
+    failed |= not ok
+    print(f"# emergent makespan gap (spark-dag): {speedup:.2f}x, "
+          f"floor {min_gap:.1f}x -> {'OK' if ok else 'FAIL'}")
+
+    lo, hi = HARD_LIMPLOCK_BAND
+    infl = limp_rows[1]["inflation_vs_healthy"]
+    ok = lo <= infl <= hi
+    failed |= not ok
+    print(f"# limplock fleet inflation: {infl:.2f}x, band "
+          f"[{lo}, {hi}] -> {'OK' if ok else 'FAIL'}")
+
+    if baseline_path:
+        with open(baseline_path) as fh:
+            doc = json.load(fh)
+        for section, rows in (("makespan_gap", gap_rows),
+                              ("limplock", limp_rows)):
+            ref = {r["config"]: r for r in doc.get(section) or []}
+            for r in rows:
+                base = ref.get(r["config"])
+                if base is None:
+                    print(f"# {section}/{r['config']}: no baseline row; "
+                          f"skipped")
+                    continue
+                rel = abs(r["makespan_s"] - base["makespan_s"]) \
+                    / base["makespan_s"]
+                ok = rel <= drift
+                failed |= not ok
+                verdict = "OK" if ok else ("DRIFT -- regenerate the "
+                                           "artifact if the model "
+                                           "change is deliberate")
+                print(f"# {section}/{r['config']}: makespan "
+                      f"{r['makespan_s']:.2f}s vs baseline "
+                      f"{base['makespan_s']:.2f}s (drift {rel:.1%}, "
+                      f"tol {drift:.0%}) -> {verdict}")
+    return 1 if failed else 0
+
+
+def print_rows(title: str, rows: list) -> None:
+    if not rows:
+        return
+    print(f"\n# {title}")
+    cols = []
+    for r in rows:
+        cols.extend(k for k in r if k not in cols)
+    print("  ".join(c.rjust(max(len(c), 12)) for c in cols))
+    for r in rows:
+        cells = []
+        for c in cols:
+            v = r.get(c)
+            s = f"{v:.4g}" if isinstance(v, float) else ("" if v is None
+                                                         else str(v))
+            cells.append(s.rjust(max(len(c), 12)))
+        print("  ".join(cells))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    ap.add_argument("--out", default=None,
+                    help="BENCH_appgraph.json path (default: repo root; "
+                         "omitted in --smoke unless given)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="same deterministic gates, CI-fast")
+    ap.add_argument("--check-baseline", default=None, metavar="PATH",
+                    help="gate the makespans against this checked-in "
+                         "artifact; nonzero exit on failure")
+    ap.add_argument("--min-gap", type=float, default=2.0,
+                    help="hard floor on the emergent dynamic-vs-static "
+                         "makespan speedup")
+    ap.add_argument("--drift", type=float, default=0.05,
+                    help="relative tolerance vs the checked-in makespans")
+    args = ap.parse_args()
+
+    gap_rows = measure_makespan_gap(seed=args.seed)
+    limp_rows = measure_limplock(seed=args.seed)
+    overhead_rows = measure_overhead(seed=args.seed)
+    print_rows("spark-dag emergent makespan gap", gap_rows)
+    print_rows("limplock barrier coupling", limp_rows)
+    print_rows("AppGraph carry overhead (timing, informational)",
+               overhead_rows)
+
+    out = args.out or (None if args.smoke
+                       else os.path.join(root, "BENCH_appgraph.json"))
+    if out:
+        with open(out, "w") as fh:
+            json.dump({"makespan_gap": gap_rows, "limplock": limp_rows,
+                       "smoke_reference": overhead_rows}, fh, indent=2)
+        print(f"\nwrote {out}")
+    return check_gates(gap_rows, limp_rows, args.check_baseline,
+                       args.min_gap, args.drift)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -37,7 +37,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .control import ControllerParams
+from .control import ControllerParams, control_step
 from .eviction import LFUPolicy
 from .plane import CapturedTrace, MemoryPlane, NodeSpec, PlaneSpec
 from .monitor import SimulatedMonitor
@@ -482,6 +482,193 @@ def run_paper_experiment(app: Optional[IterativeAppSpec] = None,
                          **overrides) -> Dict[int, SimResult]:
     return {c: simulate(make_paper_config(c, app=app, seed=seed, **overrides))
             for c in configs}
+
+
+# ---------------------------------------------------------------------------
+# AppGraph oracle: float64 discrete-event makespan reference
+# ---------------------------------------------------------------------------
+
+def simulate_app_graph(graph, demand: np.ndarray, *,
+                       node_memory: float,
+                       interval_s: float = 1.0,
+                       params: Optional[ControllerParams] = None,
+                       static_grant: float = 25.0 * GiB,
+                       cache=None) -> Dict[str, object]:
+    """Float64 discrete-event oracle for the AppGraph makespan.
+
+    An independent implementation of the stage-DAG co-simulation the
+    sweep engine streams through its scan
+    (:mod:`repro.lab.appgraph`): per node, one scalar Eq.-1 controller
+    (:func:`~repro.core.control.control_step`, the float64 reference
+    law) observes external demand plus the active stage's held memory,
+    and the node's task queue drains at ``compute_gibps`` stretched by
+    the Fig.-2 curve (and, with a :class:`~repro.lab.scenarios.CacheSpec`,
+    by the same analytic miss/eviction stalls, mirrored here in f64).
+
+    Where the scan quantizes the queue to whole control intervals, this
+    oracle **splits events sub-interval**: within an interval the drain
+    rate is piecewise constant, a node finishing a stage row mid-
+    interval promotes (non-barrier) or blocks (barrier) at the exact
+    event time, a barrier releases every blocked node at the instant
+    the fleet's slowest finishes, and rates are re-derived at each
+    split from the new row's held demand.  The parity tests pin the
+    streamed f32 interval-quantized makespan against this to a
+    relative tolerance that brackets the quantization gap.
+
+    Args:
+      graph: a :class:`repro.lab.appgraph.AppGraphSpec`.
+      demand: ``(N, T)`` external (HPCC) demand in **bytes** per node
+        per control interval -- the same array the sweep consumes
+        (transposed).
+      node_memory: per-node total memory M, bytes.
+      interval_s: control interval T.
+      params: controller parameters; ``None`` runs the static baseline
+        with the grant pinned at ``static_grant`` bytes.
+      cache: optional ``CacheSpec``; mirrors CacheLoop's analytic
+        resident/hit/refill dynamics in float64 (interval-quantized,
+        as in the scan -- only the *queue* is event-split).
+
+    Returns a dict: ``makespan_s`` (finished -> exact event time,
+    else the sweep's work-linear extrapolation), ``finished``,
+    ``t_done_s``, ``stage_finish_s`` (per compiled row: the wall clock
+    at which the row cleared fleet-wide, -1 if never), and
+    ``work_done_gib`` per node.
+    """
+    from ..lab.appgraph import compile_graph   # lazy: core must not
+    # import the lab at module scope (the lab imports core)
+
+    g = compile_graph(graph, demand.shape[0])
+    n_nodes, t_steps = demand.shape
+    demand = np.asarray(demand, np.float64)
+    m = float(node_memory)
+    w = g.work_gib.astype(np.float64)              # (S+1, N) GiB
+    stage_demand = g.demand_bytes.astype(np.float64)
+    barrier = g.barrier.astype(np.float64)
+    s_tot = g.n_rows
+    comp = float(graph.compute_gibps)              # GiB/s nominal
+
+    u0 = float(params.u_max) if params is not None else float(static_grant)
+    u = np.full(n_nodes, u0, np.float64)
+    v_prev: List[Optional[float]] = [None] * n_nodes
+
+    if cache is not None:
+        from .eviction import policy_model
+        conc = float(policy_model(cache.policy).concentration)
+        hit_exp = 1.0 - float(cache.reuse_skew)
+        wset = float(cache.working_set_frac) * m   # bytes
+        access_g = float(cache.access_gibps) * interval_s   # GiB/interval
+        refill_b = float(cache.refill_gibps) * GiB * interval_s
+        access_b = access_g * GiB
+        cold_mix = float(cache.reuse_skew)
+        res0 = float(cache.warm_frac) * min(u0, wset)
+        wf0 = res0 / wset
+        resident = np.full(n_nodes, res0, np.float64)
+
+    sidx = np.zeros(n_nodes, np.int64)
+    wleft = w[0].copy()
+    wdone = np.zeros(n_nodes, np.float64)
+    blocked = np.zeros(n_nodes, bool)
+    stage_finish = np.full(s_tot, -1.0, np.float64)
+    t_done_s = -1.0
+
+    def slowdown_at(n_i: int, store: np.ndarray, t: int) -> float:
+        d_i = demand[n_i, t] + stage_demand[sidx[n_i]]
+        return hpl_slowdown((d_i + store[n_i]) / m)
+
+    for t in range(t_steps):
+        d = demand[:, t] + stage_demand[sidx]
+        store = resident if cache is not None else u
+        v = d + store
+        r = v / m
+        if params is not None:
+            u_next = np.array([control_step(u[i], v[i], params,
+                                            v_prev=v_prev[i])
+                               for i in range(n_nodes)])
+        else:
+            u_next = u
+        stall = np.zeros(n_nodes, np.float64)
+        if cache is not None:
+            res_ev = np.minimum(resident, u_next)
+            ev_g = (resident - res_ev) / GiB
+            f = np.minimum(res_ev / wset, 1.0)
+            hit = conc * f ** hit_exp + (1.0 - conc) * f
+            if t * access_b < wset:                # cold-scan window
+                wf = np.minimum(wf0, f)
+                hit = wf + cold_mix * (hit - wf)
+            miss_g = (1.0 - hit) * access_g
+            resident = np.minimum(np.minimum(u_next, wset),
+                                  res_ev + np.minimum(miss_g * GiB,
+                                                      refill_b))
+            stall = (miss_g * cache.miss_penalty_s_per_gib
+                     + ev_g * cache.evict_penalty_s_per_gib)
+
+        # --- event-split queue advance over [t, t+1) * interval_s ----
+        # Rate is piecewise constant between events; miss/eviction
+        # stalls stretch the whole interval uniformly (cache state is
+        # interval-level), the Fig.-2 term re-derives at each split.
+        # ``store`` still holds the pre-update values -- the scan's
+        # dt_app uses the same pre-eviction observation.
+        rate = np.array([comp * interval_s
+                         / (interval_s * slowdown_at(i, store, t)
+                            + stall[i]) for i in range(n_nodes)])
+        elapsed = np.zeros(n_nodes, np.float64)
+        while t_done_s < 0.0:
+            eta = np.full(n_nodes, np.inf)
+            act = (~blocked) & (sidx < s_tot)
+            eta[act] = elapsed[act] + wleft[act] / rate[act]
+            i = int(np.argmin(eta))
+            if eta[i] > interval_s:
+                break
+            t_ev = float(eta[i])
+            abs_t = t * interval_s + t_ev
+            wdone[i] += wleft[i]
+            wleft[i] = 0.0
+            elapsed[i] = t_ev
+            s = int(sidx[i])
+            if barrier[s] > 0.0:
+                blocked[i] = True
+                if bool(np.all(blocked & (sidx == s))):
+                    stage_finish[s] = abs_t
+                    blocked[:] = False
+                    sidx[:] = s + 1
+                    if s + 1 >= s_tot:
+                        t_done_s = abs_t
+                        break
+                    wleft = w[s + 1].copy()
+                    elapsed[:] = t_ev
+                    rate = np.array([
+                        comp * interval_s
+                        / (interval_s * slowdown_at(j, store, t)
+                           + stall[j]) for j in range(n_nodes)])
+            else:
+                stage_finish[s] = max(stage_finish[s], abs_t)
+                sidx[i] = s + 1
+                if int(np.min(sidx)) >= s_tot:
+                    t_done_s = abs_t
+                    break
+                if sidx[i] < s_tot:
+                    wleft[i] = w[sidx[i], i]
+                    rate[i] = (comp * interval_s
+                               / (interval_s * slowdown_at(i, store, t)
+                                  + stall[i]))
+        if t_done_s >= 0.0:
+            break
+        act = (~blocked) & (sidx < s_tot)
+        prog = rate * (interval_s - elapsed)
+        wdone[act] += np.minimum(prog, wleft)[act]
+        wleft[act] = np.maximum(wleft - prog, 0.0)[act]
+        v_prev = list(v)
+        u = u_next
+
+    horizon_s = t_steps * interval_s
+    if t_done_s >= 0.0:
+        makespan = t_done_s
+    else:
+        makespan = max(horizon_s * float(w.sum())
+                       / max(float(wdone.sum()), 1e-6), horizon_s)
+    return {"makespan_s": makespan, "finished": t_done_s >= 0.0,
+            "t_done_s": t_done_s, "stage_finish_s": stage_finish,
+            "work_done_gib": wdone}
 
 
 # ---------------------------------------------------------------------------

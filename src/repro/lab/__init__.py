@@ -18,6 +18,14 @@ program:
   **CacheLoop** state per node -- resident set, analytic hit ratio,
   eviction/refill flux, modeled app runtime -- so sweeps score the
   paper's headline metric, not just stability.
+* :mod:`.appgraph`  -- **AppGraph**: declarative stage DAGs
+  (:class:`StageSpec` / :class:`AppGraphSpec`, map->shuffle->reduce
+  with dependency edges) co-simulated *inside* the scanned sweep:
+  per-node task queues drain at a rate modulated by live memory
+  pressure, barrier stages wait on the fleet's slowest node (limplock),
+  stage-held demand feeds back into the trace, and the end-to-end
+  makespan streams out as ``FleetStats.makespan`` -- the paper's
+  headline speedup as an emergent measurement.
 * :mod:`.score`     -- Figs. 5-8 analogue metrics (:class:`FleetStats`)
   and scalar objectives, plus the streaming fixed-bin quantile and
   Kahan reduction primitives the engine fuses into its scan.
@@ -45,13 +53,16 @@ Tuned presets surface through ``repro.configs.dynims.tuned_params`` and
 ``MemoryPlane.for_scenario``.
 """
 
+from .appgraph import (AppGraphSpec, CompiledGraph, StageSpec, compile_graph,
+                       reference_makespan, topo_order)
 from .scenarios import (CacheSpec, ReplayTrace, ScenarioSpec, TRACE_FAMILIES,
                         get_scenario, list_scenarios, register_scenario)
 from .score import (FleetStats, OVER_R0_EPS, QUANT_BINS, QUANT_LEVELS,
                     QUANT_RANGE, RUNTIME_WEIGHT, SETTLE_TOL,
                     compute_fleet_stats, default_score, finalize_fleet_stats,
-                    hpl_slowdown_curve, kahan_add, quantile_from_codes,
-                    runtime_score, stats_to_dict, utilization_codes)
+                    hpl_slowdown_curve, kahan_add, makespan_score,
+                    quantile_from_codes, runtime_score, stats_to_dict,
+                    utilization_codes)
 from .sweep import (CODES_BUDGET_BYTES, ENGINES, GainSet, SweepPlan,
                     SweepResult, XLA_DEFAULT_CHUNK, paper_law_mask,
                     plan_specialization, resolve_devices, run_sweep,
@@ -62,20 +73,24 @@ from .tune import (OBJECTIVES, Objective, PortfolioResult, RetuneHandle,
                    tune_gains, tune_portfolio)
 
 __all__ = [
-    "CODES_BUDGET_BYTES", "CacheSpec", "ENGINES", "FleetStats",
+    "AppGraphSpec", "CODES_BUDGET_BYTES", "CacheSpec", "CompiledGraph",
+    "ENGINES", "FleetStats",
     "GainSet", "OBJECTIVES", "OVER_R0_EPS", "Objective",
     "PortfolioResult", "QUANT_BINS",
     "QUANT_LEVELS", "QUANT_RANGE", "RUNTIME_WEIGHT", "SETTLE_TOL",
     "ReplayTrace", "RetuneHandle", "RetuneResult", "ScenarioSpec",
-    "SweepPlan", "SweepResult", "TRACE_FAMILIES",
-    "TuneResult", "XLA_DEFAULT_CHUNK", "compute_fleet_stats",
-    "default_score",
+    "StageSpec", "SweepPlan", "SweepResult", "TRACE_FAMILIES",
+    "TuneResult", "XLA_DEFAULT_CHUNK", "compile_graph",
+    "compute_fleet_stats", "default_score",
     "finalize_fleet_stats", "get_scenario", "grid_gains", "halving_tune",
-    "hpl_slowdown_curve", "kahan_add", "list_scenarios", "paper_law_mask",
+    "hpl_slowdown_curve", "kahan_add", "list_scenarios", "makespan_score",
+    "paper_law_mask",
     "plan_specialization", "quantile_from_codes", "random_gains",
-    "register_scenario", "resolve_devices", "resolve_objective",
+    "reference_makespan", "register_scenario", "resolve_devices",
+    "resolve_objective",
     "retune_online", "run_sweep", "runtime_score", "stats_to_dict",
-    "sweep_demand", "tune_gains", "tune_portfolio", "utilization_codes",
+    "sweep_demand", "topo_order", "tune_gains", "tune_portfolio",
+    "utilization_codes",
 ]
 
 

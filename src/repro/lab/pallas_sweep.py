@@ -580,6 +580,7 @@ def pallas_sweep_demand(
     chunk: Optional[int] = None,
     devices=None,
     cache: Optional[CacheSpec] = None,
+    app_graph=None,
     node_shards: int = 1,
     horizon: Optional[int] = None,
     precision: str = "f32",
@@ -600,7 +601,25 @@ def pallas_sweep_demand(
     executable each.  ``devices`` meshes and ``node_shards`` are
     accepted for API uniformity but fall back to the single-device
     kernel grid with a one-time warning.
+
+    ``app_graph`` (the AppGraph DAG co-simulation) is accepted for API
+    uniformity but the queue/barrier carry is not kernelized yet: it
+    needs two cross-lane scalar folds per step inside the tile, which
+    the current mosaic layout cannot express without a lane shuffle.
+    Falls back to the XLA engine with a one-time warning -- the fleet
+    two-level carry precedent (see ROADMAP).
     """
+    if app_graph is not None:
+        warn_once("pallas:app_graph",
+                  "pallas_sweep_demand: the AppGraph queue/barrier "
+                  "carry is not kernelized yet; falling back to the "
+                  "XLA sweep engine for this call", RuntimeWarning)
+        from .sweep import sweep_demand
+        return sweep_demand(
+            demand, gains, node_memory=node_memory, interval_s=interval_s,
+            occupancy=occupancy, chunk=chunk, devices=devices, cache=cache,
+            app_graph=app_graph, node_shards=node_shards, horizon=horizon,
+            engine="xla")
     demand = np.asarray(demand)
     if cache is not None and float(occupancy) != 1.0:
         raise ValueError("cache modeling replaces the occupancy "

@@ -35,6 +35,7 @@ import numpy as np
 from ..core.eviction import POLICY_MODELS
 from ..core.traces import (GiB, bursty_trace, constant_trace,
                            fleet_demand_traces, hpcc_trace)
+from .appgraph import AppGraphSpec, StageSpec, compile_graph
 
 TRACE_FAMILIES = ("hpcc", "constant", "bursty", "replay")
 
@@ -198,6 +199,14 @@ class ScenarioSpec:
                        store; a cache spec requires ``occupancy == 1``
                        (the resident set replaces the occupancy
                        abstraction).
+      app_graph:       optional :class:`~repro.lab.appgraph.AppGraphSpec`
+                       enabling the DAG co-simulation (per-node task
+                       queues advancing under live memory pressure,
+                       barrier stages gated on the fleet's slowest
+                       node, stage-held demand fed back into the
+                       trace).  Sweeps then report end-to-end
+                       ``FleetStats.makespan``.  Validated against
+                       ``n_nodes`` (slow-node indices must exist).
       replay:          the captured demand a ``"replay"`` scenario
                        carries (required for that family, forbidden
                        elsewhere).  Build with
@@ -227,6 +236,7 @@ class ScenarioSpec:
     failure_len_s: float = 5.0
     occupancy: float = 1.0
     cache: Optional[CacheSpec] = None
+    app_graph: Optional[AppGraphSpec] = None
     replay: Optional[ReplayTrace] = None
     description: str = ""
 
@@ -249,6 +259,11 @@ class ScenarioSpec:
         if self.cache is not None and self.occupancy != 1.0:
             raise ValueError("cache modeling replaces the occupancy "
                              "abstraction; need occupancy == 1.0")
+        if self.app_graph is not None:
+            # Fails fast on out-of-range slow_nodes / bad DAGs; the
+            # compiled arrays themselves are rebuilt (cheaply) at sweep
+            # staging time.
+            compile_graph(self.app_graph, self.n_nodes)
 
     def replace(self, **kw) -> "ScenarioSpec":
         return dataclasses.replace(self, **kw)
@@ -591,6 +606,53 @@ register_scenario(ScenarioSpec(
                     evict_penalty_s_per_gib=0.1),
     description="bursts force evict/refill cycles through a slow-refill "
                 "LRU cache: reclaim aggression now costs reloads"))
+
+# AppGraph scenarios: the application is a stage DAG co-simulated
+# inside the sweep, scored on end-to-end makespan.  "spark-dag" is the
+# paper's Sec. IV workload restated as structure -- an iterative
+# map->shuffle->reduce job whose queues drain through an LFU cache
+# under HPCC pressure, where the tuned dynamic controller's makespan
+# gap over the static Table-I 25G grant is *emergent* (no penalty
+# weight; see tests/test_appgraph.py and BENCH_appgraph.json).
+# "limplock" isolates the barrier coupling: one 4x-degraded node gates
+# every shuffle barrier, inflating fleet makespan ~4x.
+register_scenario(ScenarioSpec(
+    name="spark-dag", family="hpcc", n_nodes=16, n_intervals=1800,
+    offset_gib=22.0, amp_range=(0.55, 0.65), phase_shift=False,
+    cache=CacheSpec(policy="lfu", reuse_skew=0.3, working_set_frac=0.5,
+                    access_gibps=6.0, refill_gibps=2.5,
+                    miss_penalty_s_per_gib=0.95, warm_frac=0.25),
+    app_graph=AppGraphSpec(
+        stages=(
+            StageSpec(name="map", tasks=64, task_gib=6.0, barrier=False,
+                      demand_gib=2.0),
+            StageSpec(name="shuffle", tasks=0, task_gib=24.0,
+                      barrier=True, demand_gib=6.0, deps=("map",)),
+            StageSpec(name="reduce", tasks=32, task_gib=12.0,
+                      barrier=True, demand_gib=3.0, deps=("shuffle",)),
+        ),
+        iterations=4, compute_gibps=4.0),
+    description="iterative Spark DAG (4 x map->shuffle->reduce, ~288G "
+                "of task data per node) drained through an LFU cache "
+                "under synchronized HPCC pressure (HPL phases hit every "
+                "node at once); scored on emergent makespan"))
+register_scenario(ScenarioSpec(
+    name="limplock", family="constant", n_nodes=8, n_intervals=1200,
+    base_gib=40.0, amp_range=(1.0, 1.0), phase_shift=False,
+    app_graph=AppGraphSpec(
+        stages=(
+            StageSpec(name="map", tasks=0, task_gib=8.0, barrier=True,
+                      demand_gib=4.0),
+            StageSpec(name="shuffle", tasks=0, task_gib=8.0,
+                      barrier=True, demand_gib=8.0, deps=("map",)),
+            StageSpec(name="reduce", tasks=0, task_gib=8.0, barrier=True,
+                      demand_gib=2.0, deps=("shuffle",)),
+        ),
+        iterations=2, compute_gibps=2.0, slow_nodes=(0,),
+        slow_factor=4.0),
+    description="one 4x-degraded node behind every shuffle barrier: the "
+                "limplock effect -- fleet makespan tracks the straggler, "
+                "not the healthy median"))
 
 # Runtime-churn scenario: the demand is synthesized by actually
 # *running* the runtime's fault machinery -- StragglerDetector's

@@ -32,6 +32,11 @@ CacheLoop additions: :class:`FleetStats` carries ``hit_ratio`` /
 cache modeling is off), :func:`hpl_slowdown_curve` is the vectorized
 Fig.-2 pressure multiplier the scanned cache model applies, and
 :func:`runtime_score` is the pure modeled-app-runtime objective.
+
+AppGraph additions: ``FleetStats.makespan`` is the DAG co-simulation's
+end-to-end wall clock (neutral when no graph is attached) and
+:func:`makespan_score` the objective that makes the paper's headline
+speedup emergent -- no penalty weight involved.
 """
 
 from __future__ import annotations
@@ -65,12 +70,20 @@ _QUANT_SCALE = QUANT_BINS / (QUANT_RANGE[1] - QUANT_RANGE[0])
 class FleetStats(NamedTuple):
     """Per-gain stability metrics; each field is scalar or ``(G,)``.
 
-    The last four fields are the CacheLoop (cache-dynamics) metrics.
-    With cache modeling off (``ScenarioSpec.cache is None``) they hold
+    Fields 11-14 are the CacheLoop (cache-dynamics) metrics.  With
+    cache modeling off (``ScenarioSpec.cache is None``) they hold
     their neutral values -- ``hit_ratio=1``, ``evicted_bytes=0``,
     ``app_runtime`` equal to the ideal horizon wall-clock,
     ``app_slowdown=1`` -- so every objective built on them is a no-op
     for pure stability sweeps.
+
+    ``makespan`` is the AppGraph (DAG co-simulation) metric: wall-clock
+    seconds until the last node drained the last stage of the
+    scenario's :class:`~repro.lab.appgraph.AppGraphSpec`.  Neutral
+    (ideal horizon seconds) when no graph is attached.  A graph that
+    does *not* finish within the horizon reports the work-linear
+    extrapolation ``horizon * total_work / done_work`` (clamped to at
+    least the horizon) so unfinished runs still order correctly.
     """
 
     mean_utilization: Array
@@ -87,6 +100,7 @@ class FleetStats(NamedTuple):
     evicted_bytes: Array             # controller-forced eviction flux
     app_runtime: Array               # modeled app runtime, s (fleet barrier)
     app_slowdown: Array              # app_runtime / ideal horizon wall-clock
+    makespan: Array                  # AppGraph end-to-end makespan, s
 
 
 def compute_fleet_stats(
@@ -99,6 +113,7 @@ def compute_fleet_stats(
     hit_ratio: Optional[Array] = None,
     evicted_bytes: Optional[Array] = None,
     app_runtime: Optional[Array] = None,
+    makespan: Optional[Array] = None,
 ) -> FleetStats:
     """Reduce a ``(T, N)`` closed-loop history to :class:`FleetStats`.
 
@@ -145,6 +160,8 @@ def compute_fleet_stats(
                        else evicted_bytes),
         app_runtime=app_runtime,
         app_slowdown=jnp.asarray(app_runtime, jnp.float32) / ideal_s,
+        makespan=(jnp.float32(ideal_s) if makespan is None
+                  else jnp.asarray(makespan, jnp.float32)),
     )
 
 
@@ -261,6 +278,18 @@ def _axis_max(x: Array, axis_name: Optional[str]) -> Array:
     return jax.lax.pmax(x.max(), axis_name)
 
 
+def _axis_min(x: Array, axis_name: Optional[str]) -> Array:
+    """Fleet-wide min (the AppGraph barrier/completion fold).
+
+    The DAG carry asks "has *every* node reached level L?" -- a min
+    over the global fleet, so under the 2-D mesh it is the one
+    collective the queue/barrier state machine needs per step.
+    """
+    if axis_name is None:
+        return x.min()
+    return jax.lax.pmin(x.min(), axis_name)
+
+
 def finalize_fleet_stats(
     *,
     util_sum: Array,             # (N,) Kahan-compensated sum of r over T
@@ -278,6 +307,7 @@ def finalize_fleet_stats(
     evicted_gib: Optional[Array] = None,     # (N,) sum of evicted bytes / GiB
     app_time_s: Optional[Array] = None,      # (N,) modeled per-node app time
     accesses_gib: Optional[Array] = None,    # scalar per-node access total
+    makespan_s: Optional[Array] = None,      # scalar AppGraph makespan, s
     axis_name: Optional[str] = None,         # shard_map node axis, if sharded
     n_nodes: Optional[int] = None,           # global N when lanes are a shard
 ) -> FleetStats:
@@ -291,7 +321,10 @@ def finalize_fleet_stats(
     all-None (cache modeling off) yields the neutral field values.
     ``app_runtime`` is the slowest node's modeled time -- iterative
     apps synchronize on a barrier, so the straggler sets the fleet's
-    runtime (``cluster_sim``'s iteration semantics).
+    runtime (``cluster_sim``'s iteration semantics).  ``makespan_s``
+    is the AppGraph co-simulation's end-to-end result, already a
+    fleet-global scalar (its barrier folds run inside the scan);
+    ``None`` (no graph attached) pins the neutral ideal horizon.
 
     When the node axis is sharded under ``shard_map`` (the 2-D
     gains x nodes mesh), the accumulators here are one shard's lanes:
@@ -333,6 +366,8 @@ def finalize_fleet_stats(
         evicted_bytes=evicted_bytes,
         app_runtime=app_runtime,
         app_slowdown=app_runtime / ideal_s,
+        makespan=(jnp.asarray(ideal_s, jnp.float32) if makespan_s is None
+                  else jnp.asarray(makespan_s, jnp.float32)),
     )
 
 
@@ -375,6 +410,23 @@ def runtime_score(stats: FleetStats) -> Array:
     modeling off every gain scores the constant -1.
     """
     return -jnp.asarray(stats.app_slowdown)
+
+
+def makespan_score(stats: FleetStats) -> Array:
+    """Negated AppGraph end-to-end makespan; higher is better.
+
+    The *emergent* runtime objective: no penalty weights, no modeled
+    slowdown term -- just how fast the declared stage DAG actually
+    drained under the candidate gains, with memory pressure and cache
+    misses acting through the queue-advance rate inside the
+    co-simulation.  A controller wins here only by keeping caches warm
+    and nodes off the swap cliff *while the job runs*, which is the
+    paper's headline claim stated as a measurement instead of a
+    weighted objective.  Only meaningful on scenarios with an
+    ``app_graph``; otherwise every gain scores the constant negated
+    horizon.
+    """
+    return -jnp.asarray(stats.makespan)
 
 
 def stats_to_dict(stats: FleetStats,

@@ -42,6 +42,15 @@ cache-off scenarios compile the exact pre-CacheLoop program, and a
 mixed paper/beyond-paper gain set is partitioned by law class
 (:func:`paper_law_mask`) so only the points with active beyond-paper
 knobs pay for the fallback executable.
+
+**AppGraph**: a scenario with an
+:class:`~repro.lab.appgraph.AppGraphSpec` co-simulates its stage DAG in
+the same scan -- per-node task queues drain at a rate stretched by the
+Fig.-2 pressure curve (and cache stalls), barrier stages promote on a
+fleet-wide ``pmin``, and stage transitions feed their held demand back
+into the trace the controller observes.  End-to-end wall clock streams
+out as ``FleetStats.makespan``; ``app_graph=None`` compiles the exact
+pre-AppGraph program.
 """
 
 from __future__ import annotations
@@ -69,10 +78,12 @@ except AttributeError:
 from ..core.control import ControllerParams, vectorized_step
 from ..core.eviction import policy_model
 from ..core.traces import GiB
+from .appgraph import AppGraphSpec, compile_graph
 from .scenarios import CacheSpec, ScenarioSpec, get_scenario
-from .score import (FleetStats, OVER_R0_EPS, SETTLE_TOL, default_score,
-                    finalize_fleet_stats, hpl_slowdown_curve, kahan_add,
-                    quantile_from_codes, utilization_codes)
+from .score import (FleetStats, OVER_R0_EPS, SETTLE_TOL, _axis_min,
+                    _axis_sum, default_score, finalize_fleet_stats,
+                    hpl_slowdown_curve, kahan_add, quantile_from_codes,
+                    utilization_codes)
 
 # Upper bound on gains per compiled chunk; the auto-chunk logic lowers
 # it when the per-gain uint16 code history would blow the budget.
@@ -185,6 +196,8 @@ def _one_gain_stream(demand_tn, m, inv_m, r0_g, lam_g, lam_grant_g, u_min_g,
                      paper_law: bool, unit_occupancy: bool,
                      static_bounds: Optional[Tuple[float, float]],
                      cache: Optional[CacheSpec],
+                     app_graph: Optional[AppGraphSpec] = None,
+                     work_sn=None,
                      axis_name: Optional[str] = None,
                      node_shards: int = 1):
     """Closed loop for one gain point, fully streamed.
@@ -229,6 +242,23 @@ def _one_gain_stream(demand_tn, m, inv_m, r0_g, lam_g, lam_grant_g, u_min_g,
     discrete-event simulator's cold start.  All cache knobs are
     scenario constants, so the cache branch is resolved at trace time
     -- ``cache=None`` compiles the exact pre-CacheLoop program.
+
+    ``app_graph`` (AppGraph) co-simulates the scenario's stage DAG in
+    the same scan: the carry gains per-node queue state (current stage
+    row, work remaining, Kahan work-done lanes) plus a scalar finish
+    time; each interval the active stage's held demand is added to the
+    observed demand *before* the controller sees it, the queue then
+    advances by ``compute_gibps * interval_s^2 / dt_eff`` where
+    ``dt_eff`` is the interval stretched by the Fig.-2 curve (and, with
+    a cache, miss/eviction stalls), and barrier rows promote only once
+    a fleet-wide min says every node finished the row.  Stage demand
+    constants and barrier flags bake in from the frozen spec; the
+    ``(S+1, N)`` per-node work matrix arrives as the traced ``work_sn``
+    operand (it depends on *global* node indices, which a node shard
+    cannot reconstruct locally).  Under the 2-D mesh the barrier /
+    completion folds are ``pmin`` collectives -- two scalar reductions
+    per step.  ``app_graph=None`` compiles the exact pre-AppGraph
+    program (the queue carry is the empty tuple).
     """
     n_steps, n_nodes = demand_tn.shape
     if static_bounds is not None:
@@ -263,14 +293,31 @@ def _one_gain_stream(demand_tn, m, inv_m, r0_g, lam_g, lam_grant_g, u_min_g,
         cold_mix = jnp.float32(cache.reuse_skew)
         res0 = jnp.float32(cache.warm_frac) * jnp.minimum(u0, w)
         wf0 = res0 * inv_w
+    if app_graph is not None:
+        # Node-independent graph constants bake in from the frozen
+        # spec (stage-held demand, barrier flags); only the per-node
+        # work matrix is traced (see the docstring).  slow_nodes is a
+        # work-matrix concern, stripped so the 1-node compile passes
+        # range validation.
+        _cg = compile_graph(app_graph.replace(slow_nodes=()), 1)
+        n_stage_rows = _cg.n_rows
+        stage_demand_b = jnp.asarray(_cg.demand_bytes)     # (S+1,) bytes
+        stage_barrier = jnp.asarray(_cg.barrier)           # (S+1,) flags
+        comp_itv = jnp.float32(app_graph.compute_gibps) * interval_s
 
     def saturated_usage(u, d):
         return d + u if unit_occupancy else d + occupancy * u
 
     def step(carry, d):
-        law, cst, acc = carry
+        law, cst, ags, acc = carry
         (us, us_c, cs, cs_c, c2, mx, n_r0, n_viol, last_bad, t) = acc
         u = law[0]
+        if app_graph is not None:
+            # An active stage holds its declared shuffle/scratch bytes:
+            # the controller observes demand *including* them, so stage
+            # entry/exit feeds back into the pressure the law reacts to.
+            sidx, wleft, wd, wd_c, t_done = ags
+            d = d + stage_demand_b[sidx]
         if cache is None:
             v = saturated_usage(u, d)                  # saturated store
         else:
@@ -337,26 +384,60 @@ def _one_gain_stream(demand_tn, m, inv_m, r0_g, lam_g, lam_grant_g, u_min_g,
             es, es_c = kahan_add(es, es_c, ev_g)
             ts, ts_c = kahan_add(ts, ts_c, dt_app)
             cst = (resident, hs, hs_c, es, es_c, ts, ts_c)
+        if app_graph is not None:
+            # Queue advance: the interval's wall clock stretches to
+            # dt_eff under pressure (and cache stalls), so the app
+            # makes interval_s / dt_eff of its nominal progress.
+            dt_eff = dt_app if cache is not None \
+                else interval_s * hpl_slowdown_curve(r)
+            active = sidx < n_stage_rows
+            adv = jnp.where(active, comp_itv * (interval_s / dt_eff), 0.0)
+            wd, wd_c = kahan_add(wd, wd_c, jnp.minimum(adv, wleft))
+            wleft = jnp.maximum(wleft - adv, 0.0)
+            fin = active & (wleft <= 0.0)
+            # Two-level progress code: 2*row, +1 once the row's work is
+            # drained.  A barrier row promotes only when the *fleet*
+            # min of the code says every node finished it (limplock:
+            # one slow node holds every node's code down).
+            lvl = sidx * 2 + fin.astype(jnp.int32)
+            fleet_lvl = _axis_min(jnp.min(lvl), axis_name)
+            can = fin & ((stage_barrier[sidx] == 0.0)
+                         | (fleet_lvl >= sidx * 2 + 1))
+            sidx = sidx + can.astype(jnp.int32)
+            wleft = jnp.where(
+                can, jnp.take_along_axis(work_sn, sidx[None, :], axis=0)[0],
+                wleft)
+            done_all = _axis_min(jnp.min(sidx), axis_name) >= n_stage_rows
+            t_done = jnp.where((t_done < 0.0) & done_all,
+                               (t + 1).astype(jnp.float32), t_done)
+            ags = (sidx, wleft, wd, wd_c, t_done)
         law = (u_next,) if paper_law else (u_next, v)
-        return (law, cst, acc), utilization_codes(r)
+        return (law, cst, ags, acc), utilization_codes(r)
 
     acc0 = (zeros, zeros, zeros, zeros, zeros, zeros, izeros, izeros,
             jnp.full((n_nodes,), -1, jnp.int32), jnp.int32(0))
     cst0 = ()
     if cache is not None:
         cst0 = (res0, zeros, zeros, zeros, zeros, zeros, zeros)
+    ags0 = ()
+    if app_graph is not None:
+        ags0 = (jnp.zeros((n_nodes,), jnp.int32), work_sn[0],
+                zeros, zeros, jnp.float32(-1.0))
     if paper_law:
         law0 = (u0,)
     else:
         # Seed v_prev with the first interval's usage so the slope term
         # is exactly zero before there is a previous observation
         # (matching the scalar loop's v_prev=None first step).
-        v0 = (saturated_usage(u0, demand_tn[0]) if cache is None
-              else demand_tn[0] + cst0[0])
+        d0 = demand_tn[0]
+        if app_graph is not None:
+            d0 = d0 + stage_demand_b[0]
+        v0 = (saturated_usage(u0, d0) if cache is None
+              else d0 + cst0[0])
         law0 = (u0, v0)
-    carry, codes = jax.lax.scan(step, (law0, cst0, acc0), demand_tn,
+    carry, codes = jax.lax.scan(step, (law0, cst0, ags0, acc0), demand_tn,
                                 unroll=2)
-    _, cst, acc = carry
+    _, cst, ags, acc = carry
     (us, _, cs, _, c2, mx, n_r0, n_viol, last_bad, _) = acc
     n_global = n_nodes * node_shards
     p99 = quantile_from_codes(codes, 0.99, n_steps * n_global,
@@ -366,6 +447,18 @@ def _one_gain_stream(demand_tn, m, inv_m, r0_g, lam_g, lam_grant_g, u_min_g,
         cache_kw = dict(hits_gib=cst[1], evicted_gib=cst[3],
                         app_time_s=cst[5],
                         accesses_gib=access_g * n_steps)
+    if app_graph is not None:
+        # Finished: the recorded interval count.  Unfinished: the
+        # work-linear extrapolation (clamped to at least the horizon)
+        # so truncated runs still order by real progress.
+        _, _, wd, _, t_done = ags
+        total_w = _axis_sum(jnp.sum(work_sn), axis_name)
+        done_w = _axis_sum(wd, axis_name)
+        horizon_s = jnp.float32(n_steps) * interval_s
+        cache_kw["makespan_s"] = jnp.where(
+            t_done >= 0.0, t_done * interval_s,
+            jnp.maximum(horizon_s * total_w / jnp.maximum(done_w, 1e-6),
+                        horizon_s))
     return finalize_fleet_stats(
         util_sum=us, util_max=mx, caps_sum_gib=cs, caps_sumsq_gib=c2,
         over_r0_count=n_r0, violation_count=n_viol, last_bad=last_bad,
@@ -378,7 +471,9 @@ def _chunk_stats(demand_tn, m, r0, lam, lam_grant, u_min, u_max, deadband,
                  feedforward, interval_s, occupancy, *, paper_law: bool,
                  unit_occupancy: bool,
                  static_bounds: Optional[Tuple[float, float]],
-                 cache: Optional[CacheSpec], spec: str = "",
+                 cache: Optional[CacheSpec],
+                 app_graph: Optional[AppGraphSpec] = None,
+                 work_sn=None, spec: str = "",
                  axis_name: Optional[str] = None, node_shards: int = 1):
     """One gain chunk: scan over T, vmap over gains -> (G,)-field stats.
 
@@ -405,6 +500,8 @@ def _chunk_stats(demand_tn, m, r0, lam, lam_grant, u_min, u_max, deadband,
     demand_tn = jnp.asarray(demand_tn, jnp.float32)
     m = jnp.asarray(m, jnp.float32)
     inv_m = 1.0 / m
+    if work_sn is not None:
+        work_sn = jnp.asarray(work_sn, jnp.float32)
 
     def one_gain(r0_g, lam_g, lam_grant_g, u_min_g, u_max_g, db_g, ff_g):
         return _one_gain_stream(demand_tn, m, inv_m, r0_g, lam_g,
@@ -412,6 +509,7 @@ def _chunk_stats(demand_tn, m, r0, lam, lam_grant, u_min, u_max, deadband,
                                 interval_s, occupancy, paper_law=paper_law,
                                 unit_occupancy=unit_occupancy,
                                 static_bounds=static_bounds, cache=cache,
+                                app_graph=app_graph, work_sn=work_sn,
                                 axis_name=axis_name,
                                 node_shards=node_shards)
 
@@ -425,7 +523,8 @@ def _chunk_stats(demand_tn, m, r0, lam, lam_grant, u_min, u_max, deadband,
 
 def _spec_digest(devices: Tuple, paper_law: bool, unit_occupancy: bool,
                  static_bounds: Optional[Tuple[float, float]],
-                 cache: Optional[CacheSpec], node_shards: int = 1) -> str:
+                 cache: Optional[CacheSpec], node_shards: int = 1,
+                 app_graph: Optional[AppGraphSpec] = None) -> str:
     """Short stable digest of one :func:`_compiled_sweep` cache key.
 
     Folded into the ``lab.sweep.chunk`` recompile-counter dims so the
@@ -437,14 +536,16 @@ def _spec_digest(devices: Tuple, paper_law: bool, unit_occupancy: bool,
     too.
     """
     key = repr((tuple(str(d) for d in devices), paper_law,
-                unit_occupancy, static_bounds, cache, node_shards))
+                unit_occupancy, static_bounds, cache, node_shards,
+                app_graph))
     return hashlib.sha1(key.encode()).hexdigest()[:12]
 
 
 @functools.lru_cache(maxsize=None)
 def _compiled_sweep(devices: Tuple, paper_law: bool, unit_occupancy: bool,
                     static_bounds: Optional[Tuple[float, float]],
-                    cache: Optional[CacheSpec], node_shards: int = 1):
+                    cache: Optional[CacheSpec], node_shards: int = 1,
+                    app_graph: Optional[AppGraphSpec] = None):
     """Jitted chunk program for a device tuple (sharded when > 1).
 
     With ``node_shards == 1`` the gain axis is split over a 1-D
@@ -464,28 +565,39 @@ def _compiled_sweep(devices: Tuple, paper_law: bool, unit_occupancy: bool,
     fallback below stays the bit-exact reference.
     """
     spec = _spec_digest(devices, paper_law, unit_occupancy, static_bounds,
-                        cache, node_shards)
+                        cache, node_shards, app_graph)
     fn = functools.partial(_chunk_stats, paper_law=paper_law,
                            unit_occupancy=unit_occupancy,
                            static_bounds=static_bounds, cache=cache,
-                           spec=spec,
+                           app_graph=app_graph, spec=spec,
                            axis_name="nodes" if node_shards > 1 else None,
                            node_shards=node_shards)
+    if app_graph is not None:
+        # The work matrix rides as a third leading positional operand
+        # (node-sharded like demand); routed through a wrapper so the
+        # app_graph=None program keeps its exact historical signature
+        # and jaxpr.
+        base = fn
+
+        def fn(demand_tn, m, work_sn, *rest):
+            return base(demand_tn, m, *rest, work_sn=work_sn)
     if len(devices) <= 1:
         return jax.jit(fn)
     gains_specs = (P("gains"),) * 7
+    node_p = P(None) if node_shards == 1 else P("nodes")
+    demand_p = P(None, None) if node_shards == 1 else P(None, "nodes")
+    lead_specs = (demand_p, node_p)
+    if app_graph is not None:
+        lead_specs = lead_specs + (demand_p,)          # work_sn (S+1, N)
     if node_shards == 1:
         mesh = Mesh(np.asarray(devices), ("gains",))
-        in_specs = (P(None, None), P(None)) + gains_specs + (P(), P())
     else:
         grid = np.asarray(devices).reshape(
             len(devices) // node_shards, node_shards)
         mesh = Mesh(grid, ("gains", "nodes"))
-        in_specs = ((P(None, "nodes"), P("nodes")) + gains_specs
-                    + (P(), P()))
     mapped = _shard_map(
         fn, mesh=mesh,
-        in_specs=in_specs,
+        in_specs=lead_specs + gains_specs + (P(), P()),
         out_specs=P("gains"),
         check_rep=False)
     return jax.jit(mapped)
@@ -578,6 +690,7 @@ def sweep_demand(
     chunk: Optional[int] = None,
     devices: Union[None, int, Sequence] = None,
     cache: Optional[CacheSpec] = None,
+    app_graph: Optional[AppGraphSpec] = None,
     node_shards: int = 1,
     horizon: Optional[int] = None,
     engine: str = "xla",
@@ -609,14 +722,18 @@ def sweep_demand(
     regardless of ``node_shards``).  ``cache`` enables CacheLoop (see
     :class:`~repro.lab.scenarios.CacheSpec`); a gain set mixing
     paper-faithful and beyond-paper points is partitioned by law class
-    so each class runs its own specialized executable.
+    so each class runs its own specialized executable.  ``app_graph``
+    attaches a stage-DAG co-simulation
+    (:class:`~repro.lab.appgraph.AppGraphSpec`) scored through
+    ``FleetStats.makespan``; ``None`` compiles the exact pre-AppGraph
+    program.
     """
     if _resolve_engine(engine, "sweep_demand") == "pallas":
         from .pallas_sweep import pallas_sweep_demand
         return pallas_sweep_demand(
             demand, gains, node_memory=node_memory, interval_s=interval_s,
             occupancy=occupancy, chunk=chunk, devices=devices, cache=cache,
-            node_shards=node_shards, horizon=horizon)
+            app_graph=app_graph, node_shards=node_shards, horizon=horizon)
     demand = np.asarray(demand)
     if cache is not None and float(occupancy) != 1.0:
         raise ValueError("cache modeling replaces the occupancy "
@@ -635,7 +752,8 @@ def sweep_demand(
         # path.
         sub_kw = dict(node_memory=node_memory, interval_s=interval_s,
                       occupancy=occupancy, chunk=chunk, devices=devices,
-                      cache=cache, node_shards=node_shards)
+                      cache=cache, app_graph=app_graph,
+                      node_shards=node_shards)
         idx_fast = np.flatnonzero(mask)
         idx_slow = np.flatnonzero(~mask)
         fast = sweep_demand(demand, gains.take(idx_fast), **sub_kw)
@@ -677,7 +795,7 @@ def sweep_demand(
         gains = gains.concat(pad)
     plan = plan_specialization(gains, occupancy)
     fn = _compiled_sweep(devs, plan.paper_law, plan.unit_occupancy,
-                         plan.static_bounds, cache, node_shards)
+                         plan.static_bounds, cache, node_shards, app_graph)
     # Stage every operand device-side (f32) exactly once.  The gain
     # columns used to go up as numpy float64 slices -- a silent
     # H2D transfer + cast per chunk per array -- so chunks are now
@@ -686,6 +804,14 @@ def sweep_demand(
     # jax.transfer_guard("disallow").
     demand_dev = jnp.asarray(demand_tn)
     m_dev = jnp.asarray(m)
+    lead = (demand_dev, m_dev)
+    if app_graph is not None:
+        # The (S+1, N) work matrix compiles against the *global* fleet
+        # (task round-robin and slow-node skew need true node indices)
+        # and is staged once like demand; node sharding splits its
+        # column axis the same way.
+        lead = lead + (jnp.asarray(
+            compile_graph(app_graph, n_nodes).work_gib),)
     gain_dev = [jnp.asarray(getattr(gains, f.name), jnp.float32)
                 for f in dataclasses.fields(GainSet)]
     iv = jnp.asarray(np.float32(interval_s))
@@ -700,11 +826,11 @@ def sweep_demand(
         # Compile (and its constant transfers) happen outside the guard;
         # the guarded loop below then replays only cached executables.
         jax.block_until_ready(
-            fn(demand_dev, m_dev, *cols_per_chunk[0], iv, occ))
+            fn(*lead, *cols_per_chunk[0], iv, occ))
     pending = []
     with dispatch_guard():
         for cols in cols_per_chunk:
-            pending.append(fn(demand_dev, m_dev, *cols, iv, occ))
+            pending.append(fn(*lead, *cols, iv, occ))
     chunks = [jax.tree_util.tree_map(np.asarray, st) for st in pending]
     return FleetStats(*(np.concatenate([getattr(c, f)
                                         for c in chunks])[:n_real]
@@ -794,7 +920,8 @@ def run_sweep(
     stats = sweep_demand(
         demand, gains, node_memory=m, interval_s=spec.interval_s,
         occupancy=spec.occupancy, chunk=chunk, devices=devices,
-        cache=spec.cache, node_shards=node_shards, engine=engine)
+        cache=spec.cache, app_graph=spec.app_graph,
+        node_shards=node_shards, engine=engine)
     elapsed = time.perf_counter() - t0
     return SweepResult(scenario=spec, gains=gains, stats=stats, seed=seed,
                        elapsed_s=elapsed, objective=objective)

@@ -50,7 +50,8 @@ from ..configs.dynims import PAPER_TABLE_I
 from ..core.control import ControllerParams
 from ._compat import warn_once
 from .scenarios import ScenarioSpec, get_scenario
-from .score import FleetStats, default_score, runtime_score, stats_to_dict
+from .score import (FleetStats, default_score, makespan_score,
+                    runtime_score, stats_to_dict)
 from .sweep import GainSet, SweepResult, run_sweep
 
 # The canonical name since the PR-9 API unification; the old spelling
@@ -60,10 +61,13 @@ Objective = Callable[[FleetStats], np.ndarray]
 # Named objectives accepted anywhere an objective goes: ``"default"``
 # is the stability/yield trade (``lab.score.default_score``);
 # ``"runtime"`` optimizes modeled app runtime on CacheLoop scenarios
-# (``lab.score.runtime_score``).
+# (``lab.score.runtime_score``); ``"makespan"`` optimizes the AppGraph
+# DAG co-simulation's emergent end-to-end wall clock
+# (``lab.score.makespan_score`` -- no penalty weights involved).
 OBJECTIVES: Dict[str, Objective] = {
     "default": default_score,
     "runtime": runtime_score,
+    "makespan": makespan_score,
 }
 
 
@@ -324,10 +328,21 @@ def halving_tune(
     if gains is None:
         gains = _default_candidates("grid", budget, base, seed)
     if engine == "pallas":
-        return _halving_tune_pallas(
-            spec, base, gains, rounds=rounds, keep=keep,
-            min_survivors=min_survivors, seed=seed, objective=objective,
-            chunk=chunk, devices=devices, node_shards=node_shards)
+        if spec.app_graph is not None:
+            # The in-scan halving kernel has no queue/barrier carry
+            # (same gap as pallas_sweep_demand); the host-side loop
+            # below scores AppGraph scenarios through the XLA engine.
+            warn_once("halving_tune:app_graph",
+                      "halving_tune(engine='pallas'): AppGraph "
+                      "scenarios fall back to the host-side halving "
+                      "loop on the XLA engine", RuntimeWarning)
+            engine = "xla"
+        else:
+            return _halving_tune_pallas(
+                spec, base, gains, rounds=rounds, keep=keep,
+                min_survivors=min_survivors, seed=seed,
+                objective=objective, chunk=chunk, devices=devices,
+                node_shards=node_shards)
     fracs = sorted(set(float(f) for f in rounds))
     if not fracs or fracs[0] <= 0.0 or fracs[-1] > 1.0:
         raise ValueError("rounds must be fractions in (0, 1]")

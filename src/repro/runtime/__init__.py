@@ -5,9 +5,10 @@ from .chaos import (ACTUATION_KINDS, ChaosError, ChaosHandle, ChaosSpec,
                     inject)
 from .elastic import ElasticMeshPlanner, MeshPlan
 from .fault import HeartbeatMonitor, WorkerState
-from .straggler import StragglerDetector
+from .straggler import StragglerDetector, limplock_nodes
 
 __all__ = ["ACTUATION_KINDS", "ChaosError", "ChaosHandle", "ChaosSpec",
            "ElasticMeshPlanner", "FAULT_KINDS", "FaultSpec",
            "HeartbeatMonitor", "InjectedFault", "MeshPlan",
-           "StragglerDetector", "TELEMETRY_KINDS", "WorkerState", "inject"]
+           "StragglerDetector", "TELEMETRY_KINDS", "WorkerState", "inject",
+           "limplock_nodes"]

@@ -23,6 +23,27 @@ from typing import Callable, Deque, Dict, List, Optional
 import numpy as np
 
 
+def limplock_nodes(per_node_times: np.ndarray,
+                   threshold: float = 1.5) -> List[int]:
+    """Indices of nodes whose time exceeds ``threshold`` x fleet median.
+
+    The batch (offline) form of :class:`StragglerDetector`: given one
+    per-node timing vector -- per-stage drain times from an AppGraph
+    run (:func:`repro.core.cluster_sim.simulate_app_graph` /
+    ``FleetStats.makespan`` analysis), or any per-worker wall times --
+    flag the limplock candidates.  Under barrier stages one flagged
+    node bounds the *fleet's* stage time, which is exactly why it is
+    worth finding.
+    """
+    times = np.asarray(per_node_times, np.float64).reshape(-1)
+    if times.size < 2:
+        return []
+    fleet = float(np.median(times))
+    if fleet <= 0.0:
+        return []
+    return [int(i) for i in np.flatnonzero(times > threshold * fleet)]
+
+
 @dataclass
 class StragglerReport:
     worker: str

@@ -1,0 +1,126 @@
+"""Docs gate unit suite: tools/check_docs.py.
+
+The docs job runs the gate script directly; these tests pin its
+behaviour — dead-link detection, scheme/anchor skipping, the required
+README → docs/ cross-references, the non-shipping-path rule (the
+regression class that left a dead related-repo path in ROADMAP.md),
+and the doctest pass — plus the gate's verdict on the repo's actual
+docs, so `pytest` alone catches a docs regression without the CI job.
+"""
+
+import importlib.util
+import os
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_check_docs():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", os.path.join(ROOT, "tools", "check_docs.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+cd = _load_check_docs()
+
+
+# ---------------------------------------------------------------------------
+# The repo's own docs must pass the gate
+# ---------------------------------------------------------------------------
+
+def test_repo_docs_links_are_clean():
+    assert cd.check_links(ROOT) == []
+
+
+def test_repo_docs_reference_no_build_environment_paths():
+    assert cd.check_shipping_paths(ROOT) == []
+
+
+def test_architecture_doctests_pass():
+    assert cd.run_doctests(ROOT) == []
+
+
+def test_gate_main_is_clean_end_to_end(capsys):
+    assert cd.main([]) == 0
+    assert "clean" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# Detection behaviour, on synthetic docs
+# ---------------------------------------------------------------------------
+
+def _write(tmp_path, rel, text):
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(text)
+    return p
+
+
+def test_dead_relative_link_is_flagged(tmp_path):
+    _write(tmp_path, "GUIDE.md", "see [missing](nope/gone.md)\n")
+    errs = cd.check_links(str(tmp_path), docs=("GUIDE.md",))
+    assert len(errs) == 1
+    assert "dead link" in errs[0] and "nope/gone.md" in errs[0]
+
+
+def test_scheme_anchor_and_fragment_links_are_skipped(tmp_path):
+    _write(tmp_path, "docs/OTHER.md", "content\n")
+    _write(tmp_path, "docs/GUIDE.md",
+           "[web](https://example.com/x) [mail](mailto:a@b.c)\n"
+           "[anchor](#section) [frag](OTHER.md#part)\n")
+    assert cd.check_links(str(tmp_path), docs=("docs/GUIDE.md",)) == []
+
+
+def test_links_resolve_relative_to_the_doc_not_the_root(tmp_path):
+    _write(tmp_path, "README.md", "r\n")
+    _write(tmp_path, "docs/GUIDE.md", "[up](../README.md)\n")
+    assert cd.check_links(str(tmp_path), docs=("docs/GUIDE.md",)) == []
+
+
+def test_required_readme_crossrefs_are_enforced(tmp_path):
+    _write(tmp_path, "README.md", "no links here\n")
+    errs = cd.check_links(str(tmp_path), docs=("README.md",))
+    missing = sorted(e for e in errs if "missing required" in e)
+    assert len(missing) == 2
+    assert any("ARCHITECTURE" in e for e in missing)
+    assert any("OPERATIONS" in e for e in missing)
+
+
+def test_missing_checked_doc_is_itself_a_finding(tmp_path):
+    errs = cd.check_links(str(tmp_path), docs=("GONE.md",))
+    assert errs == ["GONE.md: checked doc is missing"]
+
+
+def test_non_shipping_path_is_flagged(tmp_path):
+    _write(tmp_path, "GUIDE.md",
+           "fine line\nsee `/root/related/some_repo/` for idiom\n")
+    errs = cd.check_shipping_paths(str(tmp_path), docs=("GUIDE.md",))
+    assert len(errs) == 1 and "GUIDE.md:2" in errs[0]
+
+
+def test_doctest_runner_catches_a_failing_example(tmp_path):
+    _write(tmp_path, "docs/BAD.md",
+           "```python\n>>> 1 + 1\n3\n\n```\n")
+    errs = cd.run_doctests(str(tmp_path), docs=("docs/BAD.md",))
+    assert len(errs) == 1 and "1/1" in errs[0]
+
+
+def test_doctest_runner_rejects_example_free_docs(tmp_path):
+    _write(tmp_path, "docs/EMPTY.md", "prose only\n")
+    errs = cd.run_doctests(str(tmp_path), docs=("docs/EMPTY.md",))
+    assert len(errs) == 1 and "no doctest examples" in errs[0]
+
+
+def test_gate_exits_nonzero_on_findings(tmp_path, capsys, monkeypatch):
+    _write(tmp_path, "README.md", "[dead](gone.md)\n")
+    _write(tmp_path, "ROADMAP.md", "ok\n")
+    _write(tmp_path, "docs/ARCHITECTURE.md", "```python\n>>> 2\n2\n\n```\n")
+    _write(tmp_path, "docs/OPERATIONS.md", "ok\n")
+    monkeypatch.setattr(cd, "repo_root", lambda: str(tmp_path))
+    assert cd.main([]) == 1
+    out = capsys.readouterr().out
+    assert "dead link" in out and "finding" in out

@@ -1,0 +1,159 @@
+#!/usr/bin/env python3
+"""Docs gate: link-check + cross-refs + doctest, pure stdlib.
+
+The repo's documentation is layered -- README.md (the feature tour),
+docs/ARCHITECTURE.md (the layer map, with doctested examples),
+docs/OPERATIONS.md (every env var / CI gate / baseline workflow), and
+ROADMAP.md -- and CI keeps it honest the same way it keeps the
+benchmarks honest:
+
+* every **relative markdown link** in a checked doc must resolve to a
+  file that exists in the repo (scheme links -- http/https/mailto --
+  and pure anchors are skipped; ``#fragment`` suffixes are stripped);
+* the README must **cross-reference** both docs pages (the docs layer
+  is only useful if it is discoverable from the front door);
+* no checked doc may reference a **non-shipping path** (``/root/...``
+  build-environment paths do not exist for repo users; this is the
+  regression class that left a dead related-repo path in ROADMAP.md
+  for four PRs);
+* the fenced examples in docs/ARCHITECTURE.md run as **doctests**
+  (needs ``PYTHONPATH=src`` and jax installed; everything above is
+  stdlib-only).
+
+Usage::
+
+    PYTHONPATH=src python tools/check_docs.py            # the CI gate
+    python tools/check_docs.py --no-doctest              # links only
+
+Exits nonzero with one line per finding.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+from typing import List
+
+DOC_FILES = (
+    "README.md",
+    "ROADMAP.md",
+    "docs/ARCHITECTURE.md",
+    "docs/OPERATIONS.md",
+)
+
+# The front door must point at the docs layer.
+REQUIRED_REFS = {
+    "README.md": ("docs/ARCHITECTURE.md", "docs/OPERATIONS.md"),
+}
+
+DOCTEST_FILES = ("docs/ARCHITECTURE.md",)
+
+# [text](target) -- target up to the first ')' or whitespace.  Good
+# enough for this repo's docs; nested parens in URLs are not used.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SCHEME_RE = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")
+
+# Build-environment absolute paths that do not ship with the repo.
+_NON_SHIPPING_RE = re.compile(r"/root/(?:related|repo)\b")
+
+
+def repo_root() -> str:
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def iter_links(text: str):
+    """(line_number, raw_target) for every markdown link in ``text``."""
+    for i, line in enumerate(text.splitlines(), 1):
+        for m in _LINK_RE.finditer(line):
+            yield i, m.group(1)
+
+
+def check_links(root: str, docs=DOC_FILES) -> List[str]:
+    """Dead relative links + missing required cross-references."""
+    errors = []
+    for doc in docs:
+        path = os.path.join(root, doc)
+        if not os.path.isfile(path):
+            errors.append(f"{doc}: checked doc is missing")
+            continue
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        seen = set()
+        for lineno, target in iter_links(text):
+            if _SCHEME_RE.match(target) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            seen.add(os.path.normpath(
+                os.path.join(os.path.dirname(doc), rel)))
+            resolved = os.path.normpath(
+                os.path.join(root, os.path.dirname(doc), rel))
+            if not os.path.exists(resolved):
+                errors.append(f"{doc}:{lineno}: dead link -> {target}")
+        for required in REQUIRED_REFS.get(doc, ()):
+            if os.path.normpath(required) not in seen:
+                errors.append(f"{doc}: missing required link to {required}")
+    return errors
+
+
+def check_shipping_paths(root: str, docs=DOC_FILES) -> List[str]:
+    """Docs must not reference paths that only exist at build time."""
+    errors = []
+    for doc in docs:
+        path = os.path.join(root, doc)
+        if not os.path.isfile(path):
+            continue
+        with open(path, encoding="utf-8") as fh:
+            for i, line in enumerate(fh, 1):
+                m = _NON_SHIPPING_RE.search(line)
+                if m:
+                    errors.append(f"{doc}:{i}: non-shipping path "
+                                  f"{m.group(0)!r} referenced in docs")
+    return errors
+
+
+def run_doctests(root: str, docs=DOCTEST_FILES) -> List[str]:
+    """doctest.testfile over the example-bearing docs."""
+    import doctest
+    errors = []
+    for doc in docs:
+        path = os.path.join(root, doc)
+        if not os.path.isfile(path):
+            errors.append(f"{doc}: doctest target is missing")
+            continue
+        failures, attempted = doctest.testfile(path, module_relative=False)
+        if failures:
+            errors.append(f"{doc}: {failures}/{attempted} doctest "
+                          f"examples failed (rerun: python -m doctest "
+                          f"{doc} -v)")
+        elif attempted == 0:
+            errors.append(f"{doc}: no doctest examples found (the "
+                          f"worked-examples section is load-bearing)")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--no-doctest", action="store_true",
+                    help="skip the doctest pass (no jax / PYTHONPATH "
+                         "needed; links and paths are still checked)")
+    args = ap.parse_args(argv)
+
+    root = repo_root()
+    errors = check_links(root) + check_shipping_paths(root)
+    if not args.no_doctest:
+        errors += run_doctests(root)
+    for e in errors:
+        print(f"DOCS: {e}")
+    if errors:
+        print(f"docs gate: {len(errors)} finding(s)")
+        return 1
+    print("docs gate: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
